@@ -1,0 +1,71 @@
+"""Paper EC.8.5: convergence to the fluid optimum as n grows.
+
+Two-class synthetic instance (decode-heavy / prefill-heavy), exact CTMC
+simulation of the paper's stochastic network under gate-and-route and the
+SLI-aware randomized router.  Checks:
+
+* per-server revenue -> R* (LP optimum), error shrinking in n;
+* prefill occupancies x_i -> x_i* under both policies;
+* decode occupancies (y_m+y_s per class) -> LP targets under the
+  SLI-aware router (Theorem 4) but not necessarily under plain
+  gate-and-route (the paper's Fig. EC.6 observation).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.planning import SLISpec, solve_bundled_lp
+from repro.core.policies import gate_and_route, sli_aware_policy
+from repro.core.simulator import CTMCSimulator
+from repro.core.types import Pricing, ServicePrimitives, WorkloadClass
+
+from .bench_sli_pareto import CLASSES
+from .common import fmt_table, save
+
+PRIM = ServicePrimitives()
+PRICING = Pricing(0.1, 0.2)
+
+
+def run(quick: bool = True) -> dict:
+    plan = solve_bundled_lp(CLASSES, PRIM, PRICING)
+    plan_sli = solve_bundled_lp(CLASSES, PRIM, PRICING,
+                                sli=SLISpec(pin_zero_decode_queue=True))
+    ns = [20, 50, 200] if quick else [5, 20, 50, 200, 500]
+    seeds = [0, 1] if quick else [0, 1, 2, 3, 4]
+    horizon, warmup = (300.0, 75.0) if quick else (600.0, 150.0)
+    rows, occ = [], []
+    for n in ns:
+        for name, pol in (("gate_and_route", gate_and_route(plan)),
+                          ("sli_aware", sli_aware_policy(plan_sli))):
+            revs, xs, ys = [], [], []
+            for seed in seeds:
+                sim = CTMCSimulator(CLASSES, PRIM, PRICING, pol, n=n,
+                                    seed=seed)
+                r = sim.run(horizon, warmup=warmup)
+                revs.append(r.revenue_rate_per_server)
+                xs.append(r.avg_x)
+                ys.append(r.avg_ym + r.avg_ys)
+            p = pol.plan
+            rev = float(np.mean(revs))
+            x_err = float(np.abs(np.mean(xs, 0) - p.x).sum())
+            y_err = float(np.abs(np.mean(ys, 0) - (p.ym + p.ys)).sum())
+            rows.append({"n": n, "policy": name,
+                         "rev_per_server": round(rev, 2),
+                         "R_star": round(p.revenue_rate, 2),
+                         "gap_pct": round(100 * (1 - rev / p.revenue_rate),
+                                          2),
+                         "x_err_l1": round(x_err, 4),
+                         "y_err_l1": round(y_err, 4)})
+    print(fmt_table(rows, ["n", "policy", "rev_per_server", "R_star",
+                           "gap_pct", "x_err_l1", "y_err_l1"],
+                    "\n[convergence] per-server revenue & occupancy vs n"))
+    gr = [r for r in rows if r["policy"] == "gate_and_route"]
+    out = {"rows": rows,
+           "gap_shrinks": abs(gr[-1]["gap_pct"]) <= abs(gr[0]["gap_pct"])}
+    save("convergence", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(quick=True)

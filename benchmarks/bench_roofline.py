@@ -1,0 +1,45 @@
+"""Roofline benchmark: summarize the dry-run artifacts (EXPERIMENTS.md
+section Roofline reads from this).  Requires ``python -m
+repro.launch.dryrun`` artifacts under artifacts/dryrun/."""
+
+from __future__ import annotations
+
+from pathlib import Path
+
+from repro.launch.roofline import load_records, render_table, roofline_terms
+
+from .common import save
+
+DRYRUN = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def run(quick: bool = True) -> dict:
+    recs = load_records(DRYRUN, "pod16x16", strategy="baseline")
+    if not recs:
+        print("[roofline] no dry-run artifacts yet "
+              "(run python -m repro.launch.dryrun first)")
+        return {"cells": 0}
+    print(render_table(recs))
+    ok = [r for r in recs if r.get("ok")]
+    dom = {}
+    fracs = {}
+    for r in ok:
+        t = roofline_terms(r)
+        dom[t["dominant"]] = dom.get(t["dominant"], 0) + 1
+        fracs[f"{r['arch']}|{r['shape']}"] = t["roofline_fraction"]
+    out = {
+        "cells_ok": len(ok),
+        "cells_skipped": sum(1 for r in recs if "skipped" in r),
+        "cells_failed": sum(
+            1 for r in recs if not r.get("ok") and "skipped" not in r),
+        "dominant_histogram": dom,
+        "roofline_fractions": fracs,
+    }
+    print(f"\n[roofline] ok={out['cells_ok']} skip={out['cells_skipped']} "
+          f"fail={out['cells_failed']} dominant terms: {dom}")
+    save("roofline", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(quick=True)

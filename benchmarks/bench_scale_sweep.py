@@ -1,0 +1,48 @@
+"""Paper EC.8.3: benchmark ranking across cluster scale.
+
+Holds per-server offered load fixed (cluster size x compression constant)
+and grows the cluster: (10, c), (20, c/2), (40, c/4).  Checks that the
+revenue ranking -- online gate-and-route first -- is stable across scale.
+"""
+
+from __future__ import annotations
+
+from repro.data.traces import TraceConfig, synth_azure_trace
+
+from .common import best_fixed_split, fmt_table, run_trace_policy, save
+
+
+def run(quick: bool = True) -> dict:
+    base_comp = 0.3
+    ns = [10, 20] if quick else [10, 20, 40]
+    out = {}
+    for n in ns:
+        tcfg = TraceConfig(horizon=240.0, compression=base_comp / n, seed=42)
+        trace = synth_azure_trace(tcfg)
+        rows = []
+        for pol in ("gate_and_route", "sarathi", "vllm"):
+            s = run_trace_policy(pol, trace, n, horizon=tcfg.horizon)
+            rows.append({"policy": pol,
+                         "revenue_rate": round(s["revenue_rate"], 1),
+                         "completion": round(s["completion_rate"], 3),
+                         "ttft_mean": round(s["ttft_mean"], 2)})
+        s = best_fixed_split("mix_solo", trace, n,
+                             ks=[max(1, n // 5), n // 2], horizon=tcfg.horizon)
+        rows.append({"policy": "distserve_mix_solo",
+                     "revenue_rate": round(s["revenue_rate"], 1),
+                     "completion": round(s["completion_rate"], 3),
+                     "ttft_mean": round(s["ttft_mean"], 2)})
+        rows.sort(key=lambda r: -r["revenue_rate"])
+        out[f"n{n}"] = rows
+        print(fmt_table(rows, ["policy", "revenue_rate", "completion",
+                               "ttft_mean"],
+                        f"\n[scale_sweep] n={n} (fixed per-server load)"))
+    out["ours_first_everywhere"] = all(
+        v[0]["policy"] == "gate_and_route" for v in out.values()
+        if isinstance(v, list))
+    save("scale_sweep", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(quick=True)

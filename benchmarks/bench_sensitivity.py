@@ -1,0 +1,85 @@
+"""Paper Figs. 7-8: sensitivity to (B, alpha, beta, gamma) and the
+pricing-ratio invariance heatmap.
+
+All curves are planning-LP sweeps (the paper's own methodology for Fig. 7):
+revenue = optimal LP value, TPOT = Eq. (47) at the optimum.  Fig. 8b checks
+that argmax_{c_p+c_d=k} revenue keeps a constant c_p/c_d ratio across k.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.planning import solve_bundled_lp, tpot_of_plan
+from repro.core.types import Pricing, ServicePrimitives
+
+from .bench_sli_pareto import CLASSES
+from .common import save
+
+
+def _solve(prim, pricing=Pricing(0.1, 0.2)):
+    plan = solve_bundled_lp(CLASSES, prim, pricing)
+    return float(plan.revenue_rate), float(tpot_of_plan(plan))
+
+
+def run(quick: bool = True) -> dict:
+    base = dict(alpha=0.0174, beta=6.2e-5, gamma=1 / 0.0089, batch_cap=16,
+                chunk=256)
+    out: dict = {}
+
+    sweeps = {
+        "B": [4, 8, 16, 24, 32] if not quick else [4, 8, 16, 32],
+        "alpha": list(np.linspace(0.02, 0.15, 4 if quick else 8)),
+        "beta": list(np.geomspace(1e-5, 1e-3, 4 if quick else 8)),
+        "gamma": list(np.linspace(10, 50, 4 if quick else 8)),
+    }
+    for key, vals in sweeps.items():
+        rows = []
+        for v in vals:
+            kw = dict(base)
+            if key == "B":
+                kw["batch_cap"] = int(v)
+            else:
+                kw[key] = float(v)
+            rev, tpot = _solve(ServicePrimitives(**kw))
+            rows.append({"value": float(v), "revenue": rev, "tpot": tpot})
+        out[key] = rows
+        trend = "+" if rows[-1]["revenue"] >= rows[0]["revenue"] else "-"
+        print(f"[sensitivity] {key}: revenue {rows[0]['revenue']:.1f} -> "
+              f"{rows[-1]['revenue']:.1f} ({trend})")
+
+    # revenue landscape over (B, beta) -- Fig 8a
+    grid = []
+    Bs = [4, 8, 16, 32]
+    betas = list(np.geomspace(1e-5, 5e-4, 4))
+    for Bv in Bs:
+        for bv in betas:
+            kw = dict(base, batch_cap=Bv, beta=bv)
+            rev, _ = _solve(ServicePrimitives(**kw))
+            grid.append({"B": Bv, "beta": bv, "revenue": rev})
+    out["landscape"] = grid
+
+    # pricing-ratio invariance -- Fig 8b
+    ratios = []
+    for k in ([0.3, 0.6, 1.2] if quick else [0.15, 0.3, 0.6, 1.2, 2.4]):
+        best = None
+        for f in np.linspace(0.05, 0.95, 19):
+            rev, _ = _solve(ServicePrimitives(**base),
+                            Pricing(c_p=f * k, c_d=(1 - f) * k))
+            if best is None or rev > best[1]:
+                best = (f, rev)
+        ratios.append({"k": k, "cp_share": best[0],
+                       "cp_over_cd": best[0] / (1 - best[0])})
+    out["pricing_ratio"] = ratios
+    spread = max(r["cp_over_cd"] for r in ratios) - min(
+        r["cp_over_cd"] for r in ratios)
+    out["pricing_ratio_spread"] = spread
+    print(f"[sensitivity] optimal c_p/c_d across budgets: "
+          f"{[round(r['cp_over_cd'], 3) for r in ratios]} "
+          f"(spread {spread:.4f} -> scale-invariant)")
+    save("sensitivity", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -1,0 +1,75 @@
+"""Paper Fig. 6: shadow prices of SLIs (Pareto frontiers from the LP).
+
+Uses the same two-class synthetic instance as the convergence analysis
+(EC.8.5): class 0 decode-heavy (P=300,D=1000), class 1 prefill-heavy
+(P=3000,D=400), lambda=[.5,.5], theta=[.1,.1], separate charging prices
+c_p=.1, c_d=.2 -- and sweeps one SLI cap at a time on the *planning LP*,
+reporting optimal revenue vs the cap (the slope is the shadow price).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.planning import SLISpec, solve_bundled_lp, tpot_of_plan
+from repro.core.types import Pricing, ServicePrimitives, WorkloadClass
+
+from .common import save
+
+CLASSES = [
+    WorkloadClass("decode-heavy", 300, 1000, 0.5, 0.1),
+    WorkloadClass("prefill-heavy", 3000, 400, 0.5, 0.1),
+]
+PRIM = ServicePrimitives()
+PRICING = Pricing(0.1, 0.2)
+
+
+def _sweep(kind: str, caps) -> list[dict]:
+    rows = []
+    for cap in caps:
+        if kind == "prefill_fairness":
+            sli = SLISpec(prefill_fairness_cap=cap)
+        elif kind == "decode_fairness":
+            sli = SLISpec(decode_fairness_cap=cap)
+        else:
+            sli = SLISpec(tpot_cap=cap)
+        plan = solve_bundled_lp(CLASSES, PRIM, PRICING, sli=sli)
+        rows.append({"cap": float(cap),
+                     "revenue": float(plan.revenue_rate),
+                     "tpot": float(tpot_of_plan(plan))})
+    return rows
+
+
+def run(quick: bool = True) -> dict:
+    base = solve_bundled_lp(CLASSES, PRIM, PRICING)
+    npts = 6 if quick else 15
+    gap_x = abs(base.x[0] - base.x[1])
+    gap_y = abs(base.ys[0] - base.ys[1])
+    out = {
+        "unconstrained_revenue": float(base.revenue_rate),
+        "prefill_fairness": _sweep(
+            "prefill_fairness", np.linspace(1e-4, max(gap_x, .2), npts)),
+        "decode_fairness": _sweep(
+            "decode_fairness", np.linspace(1e-4, max(gap_y, 2.0), npts)),
+        "tpot": _sweep(
+            "tpot", np.linspace(1.05 / PRIM.gamma, PRIM.tau_mix, npts)),
+    }
+
+    def shadow(rows):
+        if len(rows) < 2:
+            return 0.0
+        return (rows[-1]["revenue"] - rows[0]["revenue"]) / (
+            rows[-1]["cap"] - rows[0]["cap"])
+
+    for k in ("prefill_fairness", "decode_fairness", "tpot"):
+        out[f"{k}_shadow_price"] = shadow(out[k])
+        print(f"[sli_pareto] {k:18s}: revenue "
+              f"{out[k][0]['revenue']:8.2f} (tight) -> "
+              f"{out[k][-1]['revenue']:8.2f} (loose); "
+              f"mean shadow price {out[f'{k}_shadow_price']:.2f}")
+    save("sli_pareto", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(quick=True)

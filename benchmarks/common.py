@@ -1,0 +1,106 @@
+"""Shared helpers for the benchmark suite (one module per paper table)."""
+
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+import numpy as np
+
+from repro.core.online import OnlineController, OnlineControllerConfig
+from repro.core.planning import solve_bundled_lp
+from repro.core.policies import (PolicySpec, baseline_distserve,
+                                 baseline_sarathi, baseline_vllm,
+                                 gate_and_route)
+from repro.core.types import Pricing, ServicePrimitives, WorkloadClass
+from repro.data.traces import (Request, TraceConfig, synth_azure_trace,
+                               trace_class_means)
+from repro.serving.engine_sim import ClusterEngine, EngineConfig
+
+ART = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+
+PRIM = ServicePrimitives()       # paper's A100/Qwen3-8B calibration
+PRICING = Pricing(c_p=0.1, c_d=0.2)
+
+
+def save(name: str, payload: dict):
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / f"{name}.json").write_text(json.dumps(payload, indent=1,
+                                                 default=float))
+
+
+def planner_classes(trace, n, n_classes=2, theta=3e-4):
+    means = trace_class_means(trace, n_classes)
+    return [
+        WorkloadClass(f"class{i}", prompt_len=means[i][0],
+                      decode_len=means[i][1],
+                      arrival_rate=max(means[i][2] / n, 1e-6),
+                      patience=theta)
+        for i in range(n_classes)
+    ]
+
+
+def run_trace_policy(policy_name: str, trace, n: int, *, prim=PRIM,
+                     pricing=PRICING, horizon=600.0, online=True,
+                     seed=42, sli=None, distserve_k=None,
+                     safety=3.0) -> dict:
+    """One (policy, trace) evaluation in the calibrated engine."""
+    n_classes = max(r.cls for r in trace) + 1
+    classes = planner_classes(trace, n, n_classes=n_classes)
+    plan = solve_bundled_lp(classes, prim, pricing, sli=sli)
+    controller = None
+    cfg = EngineConfig(prim, pricing, n, seed=seed)
+    if policy_name == "gate_and_route":
+        policy = gate_and_route(plan)
+        if online:
+            controller = OnlineController(
+                classes, prim, pricing, n=n,
+                config=OnlineControllerConfig(sli=sli, safety=safety))
+    elif policy_name == "sarathi":
+        policy = baseline_sarathi(plan)
+        cfg = EngineConfig(prim, pricing, n, seed=seed, sarathi_budget=True)
+    elif policy_name == "vllm":
+        # prefill-first scheduling; chunking stays a system property (C),
+        # exactly as in the paper's Section 2 model.
+        policy = baseline_vllm(plan)
+    elif policy_name == "distserve_mix_solo":
+        policy = baseline_distserve(plan, distserve_k, variant="mix_solo")
+    elif policy_name == "distserve_prefill_solo":
+        policy = baseline_distserve(plan, distserve_k, variant="prefill_solo")
+    else:
+        raise ValueError(policy_name)
+    eng = ClusterEngine(classes, policy, cfg, controller=controller)
+    m = eng.run(trace, horizon=horizon)
+    return m.summary()
+
+
+def best_fixed_split(variant: str, trace, n: int, ks=None, **kw) -> dict:
+    """DistServe-style comparator: scan fixed splits, report the best."""
+    ks = ks if ks is not None else range(1, n)
+    best = None
+    for k in ks:
+        s = run_trace_policy(f"distserve_{variant}", trace, n,
+                             online=False, distserve_k=k, **kw)
+        if best is None or s["revenue_rate"] > best["revenue_rate"]:
+            best = dict(s, k=k)
+    return best
+
+
+def fmt_table(rows: list[dict], cols: list[str], title: str) -> str:
+    w = {c: max(len(c), *(len(f"{r.get(c, '')}") for r in rows)) for c in cols}
+    out = [title, " | ".join(c.ljust(w[c]) for c in cols)]
+    out.append("-|-".join("-" * w[c] for c in cols))
+    for r in rows:
+        out.append(" | ".join(f"{r.get(c, '')}".ljust(w[c]) for c in cols))
+    return "\n".join(out)
+
+
+def round_vals(d: dict, nd=4) -> dict:
+    out = {}
+    for k, v in d.items():
+        if isinstance(v, float):
+            out[k] = round(v, nd)
+        else:
+            out[k] = v
+    return out

@@ -1,0 +1,60 @@
+"""Run the whole benchmark suite: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only name[,name]]
+
+Artifacts land in artifacts/bench/*.json; each bench prints its table.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from . import (bench_ablations, bench_calibration, bench_charging,
+               bench_classes, bench_convergence, bench_frontier,
+               bench_matched, bench_roofline, bench_scale_sweep,
+               bench_sensitivity, bench_sli_pareto, bench_trace_replay)
+
+SUITE = [
+    ("calibration", bench_calibration),        # Fig 3
+    ("charging", bench_charging),              # Fig 2 / Section 5.1
+    ("trace_replay", bench_trace_replay),      # Table 2 / Fig 4
+    ("frontier", bench_frontier),              # Fig 5
+    ("sli_pareto", bench_sli_pareto),          # Fig 6
+    ("sensitivity", bench_sensitivity),        # Figs 7-8
+    ("matched", bench_matched),                # EC.8.2
+    ("scale_sweep", bench_scale_sweep),        # EC.8.3
+    ("classes", bench_classes),                # EC.8.4
+    ("convergence", bench_convergence),        # EC.8.5
+    ("ablations", bench_ablations),            # EC.8.6
+    ("roofline", bench_roofline),              # dry-run roofline table
+]
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale sizes (slow); default is quick mode")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+    failures = []
+    for name, mod in SUITE:
+        if only and name not in only:
+            continue
+        print(f"\n{'=' * 72}\n== bench: {name}\n{'=' * 72}", flush=True)
+        t0 = time.time()
+        try:
+            mod.run(quick=not args.full)
+            print(f"== {name} done in {time.time() - t0:.1f}s", flush=True)
+        except Exception:
+            failures.append(name)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+    print("\nall benchmarks green")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,51 @@
+"""Online adaptive control on a nonstationary Azure-like trace.
+
+The controller estimates class arrival rates from a rolling window
+(Eq. 50), re-solves the planning LP every 10 s, and retargets the
+mixed/solo split (Eq. 51).  Compared against the same gate-and-route
+policy with a *static* (initially mis-planned) split.
+
+Run:  PYTHONPATH=src python examples/online_adaptive.py
+"""
+
+import numpy as np
+
+from repro.core.online import OnlineController, OnlineControllerConfig
+from repro.core.planning import solve_bundled_lp
+from repro.core.policies import gate_and_route
+from repro.core.types import Pricing, ServicePrimitives, WorkloadClass
+from repro.data.traces import TraceConfig, synth_azure_trace, trace_class_means
+from repro.serving.engine_sim import ClusterEngine, EngineConfig
+
+N = 10
+prim = ServicePrimitives()
+pricing = Pricing()
+
+trace = synth_azure_trace(TraceConfig(horizon=600.0, compression=0.1, seed=7))
+means = trace_class_means(trace, 2)  # [(P_mean, D_mean, rate), ...]
+classes = [
+    WorkloadClass(f"class{i}", prompt_len=means[i][0], decode_len=means[i][1],
+                  arrival_rate=means[i][2] / N, patience=3e-4)
+    for i in range(2)
+]
+
+# deliberately mis-planned static baseline (cold-start rates guess)
+cold = [c.__class__(c.name, c.prompt_len, c.decode_len, 1e-3, c.patience)
+        for c in classes]
+static_plan = solve_bundled_lp(cold, prim, pricing)
+
+for name, controller in (
+    ("static (mis-planned)", None),
+    ("online adaptive", OnlineController(
+        classes, prim, pricing, n=N,
+        config=OnlineControllerConfig(window=30.0, replan_every=10.0,
+                                   safety=3.0))),
+):
+    policy = gate_and_route(static_plan)
+    eng = ClusterEngine(classes, policy, EngineConfig(prim, pricing, N),
+                        controller=controller)
+    m = eng.run(trace, horizon=600.0)
+    s = m.summary()
+    print(f"{name:22s} revenue/s={s['revenue_rate']:8.2f} "
+          f"completion={s['completion_rate']:.3f} "
+          f"ttft_mean={s['ttft_mean']:.2f}s")

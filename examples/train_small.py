@@ -1,0 +1,21 @@
+"""Train a ~100M-parameter dense LM for a few hundred steps on CPU, with
+checkpoint/restart (kill it mid-run and re-run: it resumes from the last
+checkpoint, including the data cursor).
+
+Run:  PYTHONPATH=src python examples/train_small.py
+"""
+
+from repro.launch.train import preset_100m, run_training
+
+if __name__ == "__main__":
+    out = run_training(
+        preset_100m(),
+        steps=300,
+        batch=8,
+        seq_len=256,
+        microbatches=2,
+        ckpt_dir="artifacts/ckpt_100m",
+        ckpt_every=50,
+    )
+    first, last = out["losses"][0], out["final_loss"]
+    print(f"loss {first:.3f} -> {last:.3f} over {len(out['losses'])} steps")

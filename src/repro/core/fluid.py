@@ -1,0 +1,196 @@
+"""Fluid model of Section 3, integrated with jax.lax.scan.
+
+Integrates the fluid dynamics (24)-(32) under the gate-and-route policy
+family (instantaneous occupancy-tracking prefill gate + work-conserving
+solo-first or randomized decode router), and exposes the steady state for
+validation against the planning LP (Theorem 2 / Theorem 4 property tests)
+and against the CTMC simulator (Theorem 1).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .planning import PlanSolution
+from .types import Pricing, ServicePrimitives, WorkloadClass, rate_arrays
+
+__all__ = ["FluidTrajectory", "integrate_fluid", "fluid_steady_state"]
+
+
+@dataclass
+class FluidTrajectory:
+    t: np.ndarray
+    qp: np.ndarray  # (T, I)
+    x: np.ndarray
+    qd: np.ndarray
+    ym: np.ndarray
+    ys: np.ndarray
+    revenue_rate: np.ndarray  # (T,) instantaneous bundled reward rate
+
+    def final(self) -> dict:
+        return {
+            "qp": self.qp[-1],
+            "x": self.x[-1],
+            "qd": self.qd[-1],
+            "ym": self.ym[-1],
+            "ys": self.ys[-1],
+        }
+
+
+def _router_params(plan: PlanSolution, randomized: bool):
+    if randomized:
+        p_s = jnp.asarray(plan.solo_probs())
+    else:
+        p_s = None
+    return p_s
+
+
+def integrate_fluid(
+    classes: Sequence[WorkloadClass],
+    prim: ServicePrimitives,
+    pricing: Pricing,
+    plan: PlanSolution,
+    horizon: float,
+    dt: float = 1e-3,
+    randomized_router: bool = False,
+    x0: Optional[dict] = None,
+    record_stride: int = 100,
+) -> FluidTrajectory:
+    """Euler-integrate the policy fluid; returns recorded trajectory."""
+    arr = rate_arrays(classes, prim)
+    I = len(classes)
+    B = float(prim.batch_cap)
+    lam = jnp.asarray(arr["lam"])
+    theta = jnp.asarray(arr["theta"])
+    mu_p = jnp.asarray(arr["mu_p"])
+    mu_m = jnp.asarray(arr["mu_m"])
+    mu_s = jnp.asarray(arr["mu_s"])
+    w = jnp.asarray([pricing.bundled_reward(c) for c in classes])
+
+    x_star = jnp.asarray(plan.x)
+    X_star = jnp.sum(x_star)  # static partition: fraction of mixed servers
+    cap_m = (B - 1.0) * X_star
+    cap_s = B * (1.0 - X_star)
+    p_s = _router_params(plan, randomized_router)
+
+    def proportional_fill(q, free):
+        """Move up to `free` total mass out of q, proportionally (FCFS-equiv)."""
+        tot = jnp.sum(q)
+        take = jnp.minimum(tot, free)
+        frac = jnp.where(tot > 0, take / jnp.maximum(tot, 1e-30), 0.0)
+        moved = q * frac
+        return moved
+
+    def step(state, _):
+        qp, x, qdm, qds, ym, ys = state
+        # -- primitive flows over dt ------------------------------------------
+        a = lam * dt
+        bp = theta * qp * dt
+        sp = mu_p * x * dt
+        sdm = mu_m * ym * dt
+        sds = mu_s * ys * dt
+        bdm = theta * qdm * dt
+        bds = theta * qds * dt
+
+        qp = qp + a - bp
+        x = x - sp
+        ym = ym - sdm
+        ys = ys - sds
+        qdm = qdm - bdm
+        qds = qds - bds
+
+        # -- prefill gate: instantaneous pull-up to targets --------------------
+        admit = jnp.minimum(qp, jnp.maximum(x_star - x, 0.0))
+        x = x + admit
+        qp = qp - admit
+
+        # -- decode router ------------------------------------------------------
+        if p_s is None:
+            # solo-first, single logical buffer (kept in the solo half)
+            inflow = sp
+            free_s = jnp.maximum(cap_s - jnp.sum(ys), 0.0)
+            to_s = proportional_fill(inflow, free_s)
+            inflow = inflow - to_s
+            ys = ys + to_s
+            free_m = jnp.maximum(cap_m - jnp.sum(ym), 0.0)
+            to_m = proportional_fill(inflow, free_m)
+            inflow = inflow - to_m
+            ym = ym + to_m
+            qds = qds + inflow
+            # work-conserving buffer drain (solo first)
+            free_s = jnp.maximum(cap_s - jnp.sum(ys), 0.0)
+            pull = proportional_fill(qds + qdm, free_s)
+            frac = pull / jnp.maximum(qds + qdm, 1e-30)
+            ys = ys + pull
+            qds = qds - frac * qds
+            qdm = qdm - frac * qdm
+            free_m = jnp.maximum(cap_m - jnp.sum(ym), 0.0)
+            pull = proportional_fill(qds + qdm, free_m)
+            frac = pull / jnp.maximum(qds + qdm, 1e-30)
+            ym = ym + pull
+            qds = qds - frac * qds
+            qdm = qdm - frac * qdm
+        else:
+            # randomized router with per-pool buffers (Section 5.2 / EC.7)
+            qds = qds + sp * p_s
+            qdm = qdm + sp * (1.0 - p_s)
+            free_s = jnp.maximum(cap_s - jnp.sum(ys), 0.0)
+            to_s = proportional_fill(qds, free_s)
+            ys = ys + to_s
+            qds = qds - to_s
+            free_m = jnp.maximum(cap_m - jnp.sum(ym), 0.0)
+            to_m = proportional_fill(qdm, free_m)
+            ym = ym + to_m
+            qdm = qdm - to_m
+
+        qp = jnp.maximum(qp, 0.0)
+        qdm = jnp.maximum(qdm, 0.0)
+        qds = jnp.maximum(qds, 0.0)
+        rev = jnp.sum(w * (mu_m * ym + mu_s * ys))
+        new = (qp, x, qdm, qds, ym, ys)
+        return new, (qp, x, qdm + qds, ym, ys, rev)
+
+    z = jnp.zeros(I)
+    if x0 is None:
+        state0 = (z, z, z, z, z, z)
+    else:
+        state0 = tuple(
+            jnp.asarray(x0.get(k, np.zeros(I)), dtype=jnp.result_type(float))
+            for k in ("qp", "x", "qdm", "qds", "ym", "ys")
+        )
+    n_steps = int(horizon / dt)
+    _, out = jax.lax.scan(step, state0, None, length=n_steps)
+    qp, x, qd, ym, ys, rev = (np.asarray(o) for o in out)
+    idx = np.arange(0, n_steps, record_stride)
+    return FluidTrajectory(
+        t=(idx + 1) * dt,
+        qp=qp[idx],
+        x=x[idx],
+        qd=qd[idx],
+        ym=ym[idx],
+        ys=ys[idx],
+        revenue_rate=rev[idx],
+    )
+
+
+def fluid_steady_state(
+    classes, prim, pricing, plan, horizon=400.0, dt=2e-3,
+    randomized_router=False
+) -> dict:
+    traj = integrate_fluid(
+        classes, prim, pricing, plan, horizon, dt,
+        randomized_router=randomized_router, record_stride=max(1, int(horizon / dt) // 50),
+    )
+    return {
+        "qp": traj.qp[-1],
+        "x": traj.x[-1],
+        "qd": traj.qd[-1],
+        "ym": traj.ym[-1],
+        "ys": traj.ys[-1],
+        "revenue_rate": float(traj.revenue_rate[-1]),
+    }

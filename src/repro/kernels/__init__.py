@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the mixed-iteration hot spots.
+
+Each kernel ships as a triple:
+
+* ``kernel.py`` -- pl.pallas_call with explicit BlockSpec VMEM tiling,
+* ``ops.py``    -- jit'd public wrapper (padding, interpret fallback),
+* ``ref.py``    -- pure-jnp oracle for the allclose sweeps in tests/.
+"""

@@ -1,0 +1,29 @@
+"""Jit'd public wrapper for the decode-attention kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import decode_attention_pallas
+
+__all__ = ["decode_attention"]
+
+
+@partial(jax.jit, static_argnames=("window", "attn_softcap", "block_s",
+                                   "interpret"))
+def decode_attention(q, k_cache, v_cache, kv_len, *, window=None,
+                     k_positions=None, q_positions=None, attn_softcap=None,
+                     block_s=256, interpret=None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    S = k_cache.shape[1]
+    bs = min(block_s, S)
+    while S % bs != 0:
+        bs //= 2
+    return decode_attention_pallas(
+        q, k_cache, v_cache, kv_len, window=window, k_positions=k_positions,
+        q_positions=q_positions, attn_softcap=attn_softcap, block_s=bs,
+        interpret=interpret)

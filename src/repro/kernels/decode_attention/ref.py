@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the decode-attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["decode_attention_ref"]
+
+
+def decode_attention_ref(q, k_cache, v_cache, kv_len, *, window=None,
+                         k_positions=None, q_positions=None,
+                         attn_softcap=None):
+    """q (B,1,H,D) against cache (B,S,KV,D); kv_len (B,) -> (B,1,H,D)."""
+    B, _, H, D = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, D).astype(jnp.float32)
+    sc = jnp.einsum("bkgd,bskd->bkgs", qg,
+                    k_cache.astype(jnp.float32)) / np.sqrt(D)
+    if attn_softcap is not None:
+        sc = attn_softcap * jnp.tanh(sc / attn_softcap)
+    valid = jnp.arange(S)[None, :] < kv_len[:, None]
+    if window is not None and k_positions is not None:
+        valid &= q_positions[:, None] - k_positions < window
+        valid &= k_positions <= q_positions[:, None]
+    sc = jnp.where(valid[:, None, None, :], sc, -2.0e9)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, D).astype(q.dtype)

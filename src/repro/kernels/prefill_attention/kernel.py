@@ -1,0 +1,137 @@
+"""Flash-attention prefill kernel for TPU (pl.pallas_call + BlockSpec).
+
+Grid is (batch, heads, n_q_blocks, n_k_blocks) with the K dimension
+innermost: on TPU the last grid axis is sequential per core, so the kernel
+carries the online-softmax state (running max m, normalizer l, accumulator
+acc) in VMEM scratch across K steps -- the standard flash recurrence
+re-tiled for the MXU:
+
+* q/k/v tiles are (block_q, D) / (block_k, D) VMEM blocks, D = head_dim
+  padded to a lane multiple (128) by the wrapper;
+* scores block (block_q, block_k) hits the MXU; masking (causal, sliding
+  window, prefix-LM) is applied from statically computed index offsets;
+* fully masked K blocks are *skipped* (pl.when) -- causal prefill does
+  S^2/2 work like a real fused kernel.
+
+GQA is expressed in the k/v index_map (kv head = q head // group), so no
+KV duplication is materialised.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["prefill_attention_pallas"]
+
+_NEG = -2.0e9
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale, causal, window, softcap, prefix_len,
+            block_q, block_k, n_k_blocks):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q0 = iq * block_q
+    k0 = ik * block_k
+    qpos = q0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kpos = k0 + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+
+    # block-level skip: fully-masked K blocks do no work
+    run = jnp.bool_(True)
+    if causal and prefix_len is None:
+        run &= k0 <= q0 + block_q - 1
+    if window is not None and prefix_len is None:
+        run &= q0 - (k0 + block_k - 1) < window
+
+    @pl.when(run)
+    def _body():
+        q = q_ref[0, 0].astype(jnp.float32)  # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)  # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = jnp.ones((block_q, block_k), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= qpos - kpos < window
+        if prefix_len is not None:
+            mask |= kpos < prefix_len
+        s = jnp.where(mask, s, _NEG)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[...] = l_ref[...] * alpha + p.sum(axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ik == n_k_blocks - 1)
+    def _fin():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def prefill_attention_pallas(q, k, v, *, causal=True, window=None,
+                             attn_softcap=None, prefix_len=None,
+                             block_q=128, block_k=128, interpret=False):
+    """q (B,S,H,D); k,v (B,S,KV,D) -> (B,S,H,D)."""
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    block_q = min(block_q, S)
+    block_k = min(block_k, S)
+    assert S % block_q == 0 and S % block_k == 0, (S, block_q, block_k)
+    nq, nk = S // block_q, S // block_k
+    scale = 1.0 / (D ** 0.5)
+
+    # layout: (B, H, S, D) blocks
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        softcap=attn_softcap, prefix_len=prefix_len,
+        block_q=block_q, block_k=block_k, n_k_blocks=nk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, D),
+                         lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, iq, ik: (b, h // G, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, D),
+                         lambda b, h, iq, ik: (b, h // G, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, D),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),   # running max m
+            pltpu.VMEM((block_q,), jnp.float32),   # normalizer l
+            pltpu.VMEM((block_q, D), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

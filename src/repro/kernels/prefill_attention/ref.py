@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for the prefill flash-attention kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["prefill_attention_ref"]
+
+
+def prefill_attention_ref(q, k, v, *, causal=True, window=None,
+                          attn_softcap=None, prefix_len=None):
+    """Naive full-matrix attention.
+
+    q: (B, S, H, D); k, v: (B, S, KV, D) -> (B, S, H, D).
+    GQA via head repetition; fp32 softmax.
+    """
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    kk = jnp.repeat(k, G, axis=2)
+    vv = jnp.repeat(v, G, axis=2)
+    sc = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                    kk.astype(jnp.float32)) / np.sqrt(D)
+    if attn_softcap is not None:
+        sc = attn_softcap * jnp.tanh(sc / attn_softcap)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= qpos - kpos < window
+    if prefix_len is not None:
+        mask |= kpos < prefix_len
+    sc = jnp.where(mask[None, None], sc, -2.0e9)
+    p = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(vv.dtype), vv)

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the SSD chunk-scan kernel: the naive O(S) recurrence.
+
+h_t = a_t * h_{t-1} + B_t x_t^T (outer product, scaled by dt)
+y_t = C_t . h_t + D x_t
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ssd_scan_ref"]
+
+
+def ssd_scan_ref(x_dt, Bm, Cm, log_a, initial_state=None):
+    """x_dt (B,S,H,P) already scaled by dt; Bm/Cm (B,S,N); log_a (B,S,H).
+
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).  fp32 throughout.
+    """
+    Bsz, S, H, P = x_dt.shape
+    N = Bm.shape[-1]
+    h0 = (initial_state if initial_state is not None
+          else jnp.zeros((Bsz, H, P, N), jnp.float32))
+
+    def step(h, inp):
+        x_t, b_t, c_t, la_t = inp  # (B,H,P), (B,N), (B,N), (B,H)
+        a = jnp.exp(la_t)[:, :, None, None]
+        h = h * a + jnp.einsum("bn,bhp->bhpn", b_t.astype(jnp.float32),
+                               x_t.astype(jnp.float32))
+        y = jnp.einsum("bn,bhpn->bhp", c_t.astype(jnp.float32), h)
+        return h, y
+
+    xs = (x_dt.transpose(1, 0, 2, 3), Bm.transpose(1, 0, 2),
+          Cm.transpose(1, 0, 2), log_a.transpose(1, 0, 2))
+    hT, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x_dt.dtype), hT

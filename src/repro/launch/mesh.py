@@ -1,0 +1,34 @@
+"""Production mesh factories.
+
+A *logical server* in the paper's queueing model is one TP group = one
+"model"-axis slice of the mesh; the "data" axis enumerates logical servers
+for serving and is the FSDP/DP axis for training; the "pod" axis extends
+either scheme across pods.  Defined as functions (never module-level
+constants) so importing this module never touches jax device state.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+__all__ = ["make_production_mesh", "v5e_constants"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def v5e_constants() -> dict:
+    """TPU v5e per-chip hardware constants for the roofline terms."""
+    return {
+        "peak_flops_bf16": 197e12,  # FLOP/s
+        "hbm_bw": 819e9,            # B/s
+        "ici_link_bw": 50e9,        # B/s per link (~45-50 GB/s each way)
+        "hbm_bytes": 16 * 1024**3,  # 16 GiB
+        "ici_links": 4,             # 2D torus: 4 links per chip
+    }

@@ -1,0 +1,65 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Perf hillclimb driver: run strategies on a cell, diff roofline terms.
+
+    python -m repro.launch.perf_loop --arch deepseek-v3-671b \
+        --shape decode_32k --strategies baseline,kv_int8,kv_heads
+
+Each strategy compiles the cell, the roofline terms are tabulated against
+the baseline, and the deltas on the dominant term are printed -- the
+measurement half of the hypothesis -> change -> measure -> validate loop
+(EXPERIMENTS.md section Perf is the log).
+"""
+
+import argparse
+from pathlib import Path
+
+from repro.launch.dryrun import ARTIFACTS, STRATEGIES, run_cell
+from repro.launch.roofline import roofline_terms
+
+
+def fmt(x):
+    if x >= 1:
+        return f"{x:8.3f}s "
+    if x >= 1e-3:
+        return f"{x*1e3:8.3f}ms"
+    return f"{x*1e6:8.1f}us"
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--strategies", default="baseline")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args(argv)
+    base_terms = None
+    print(f"perf loop: {args.arch} x {args.shape}")
+    hdr = (f"{'strategy':14s} {'compute':10s} {'memory':10s} {'collect':10s}"
+           f" {'dominant':10s} {'roofline%':9s} {'d(dom)%':8s}")
+    print(hdr)
+    for s in args.strategies.split(","):
+        assert s in STRATEGIES, (s, sorted(STRATEGIES))
+        rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                       strategy_name=s)
+        if not rec.get("ok"):
+            print(f"{s:14s} FAIL {rec.get('error', rec.get('skipped'))}")
+            continue
+        t = roofline_terms(rec)
+        if base_terms is None:
+            base_terms = t
+            delta = ""
+        else:
+            dom = base_terms["dominant"] + "_s"
+            delta = f"{100 * (t[dom] / base_terms[dom] - 1):+7.1f}%"
+        print(f"{s:14s} {fmt(t['compute_s'])} {fmt(t['memory_s'])} "
+              f"{fmt(t['collective_s'])} {t['dominant']:10s} "
+              f"{100 * t['roofline_fraction']:8.2f}% {delta}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""Model substrate: configs, params, mixers, and the unified LM."""
+
+from .config import ModelConfig  # noqa: F401
+from .model import (  # noqa: F401
+    forward_decode,
+    forward_prefill,
+    forward_train,
+    init_cache,
+    init_model,
+    loss_fn,
+    model_defs,
+    param_count,
+)

@@ -1,0 +1,85 @@
+"""Common layers: norms, MLPs, rotary embeddings, embedding/unembedding."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .params import PDef
+
+__all__ = [
+    "rmsnorm", "layernorm", "mlp_defs", "apply_mlp", "rope_table",
+    "apply_rope", "softcap",
+]
+
+
+def rmsnorm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    out = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layernorm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (out * scale + bias).astype(x.dtype)
+
+
+def softcap(x, cap):
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------- MLP
+
+
+def mlp_defs(d_model: int, d_ff: int, act: str) -> dict:
+    if act in ("swiglu", "geglu"):
+        return {
+            "w_gate": PDef((d_model, d_ff), ("embed", "ff")),
+            "w_up": PDef((d_model, d_ff), ("embed", "ff")),
+            "w_down": PDef((d_ff, d_model), ("ff", "embed")),
+        }
+    return {  # plain gelu MLP (whisper)
+        "w_up": PDef((d_model, d_ff), ("embed", "ff")),
+        "b_up": PDef((d_ff,), ("ff",), "zeros"),
+        "w_down": PDef((d_ff, d_model), ("ff", "embed")),
+        "b_down": PDef((d_model,), ("embed",), "zeros"),
+    }
+
+
+def apply_mlp(p: dict, x, act: str):
+    if act in ("swiglu", "geglu"):
+        g = x @ p["w_gate"]
+        u = x @ p["w_up"]
+        a = jax.nn.silu(g) if act == "swiglu" else jax.nn.gelu(g)
+        return (a * u) @ p["w_down"]
+    h = jax.nn.gelu(x @ p["w_up"] + p["b_up"])
+    return h @ p["w_down"] + p["b_down"]
+
+
+# ---------------------------------------------------------------- RoPE
+
+
+def rope_table(positions, dim: int, theta: float):
+    """positions (...,) -> (sin, cos) of shape (..., dim//2)."""
+    freqs = 1.0 / (
+        theta ** (np.arange(0, dim, 2, dtype=np.float32) / dim)
+    )
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos):
+    """x (..., S, H, D); sin/cos (..., S, D/2) broadcast over heads."""
+    d2 = x.shape[-1] // 2
+    x1, x2 = x[..., :d2], x[..., d2:]
+    s = sin[..., None, :]
+    c = cos[..., None, :]
+    xf1 = x1.astype(jnp.float32)
+    xf2 = x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * c - xf2 * s, xf2 * c + xf1 * s], axis=-1
+    ).astype(x.dtype)

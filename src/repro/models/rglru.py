@@ -1,0 +1,110 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+Block structure (Griffin):  x -> [W_side -> GeLU]  and
+[W_main -> causal conv1d(4) -> RG-LRU] -> elementwise product -> W_out.
+
+RG-LRU:  r_t = sigmoid(W_a x_t);  i_t = sigmoid(W_x x_t)
+         a_t = exp(c * r_t * log(sigmoid(Lambda)))        (per channel)
+         h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Sequence mode uses ``jax.lax.associative_scan`` (log-depth, statically
+unrolled in HLO -> honest FLOP counts); decode is the O(1) recurrence.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import RGLRUConfig
+from .params import PDef
+
+__all__ = ["rglru_defs", "rglru_forward", "rglru_decode", "init_rglru_cache"]
+
+
+def rglru_defs(cfg: RGLRUConfig, d_model: int) -> dict:
+    W = cfg.width or d_model
+    return {
+        "w_main": PDef((d_model, W), ("embed", "lru")),
+        "w_side": PDef((d_model, W), ("embed", "lru")),
+        "conv_w": PDef((cfg.conv_width, W), ("conv", "lru"), scale=0.5),
+        "conv_b": PDef((W,), ("lru",), "zeros"),
+        "w_a": PDef((W, W), ("lru", None), scale=0.02),
+        "b_a": PDef((W,), ("lru",), "const:-1.0"),
+        "w_i": PDef((W, W), ("lru", None), scale=0.02),
+        "b_i": PDef((W,), ("lru",), "zeros"),
+        "lam": PDef((W,), ("lru",), "const:2.0"),  # sigmoid(2) ~ .88 decay
+        "w_out": PDef((W, d_model), ("lru", "embed")),
+    }
+
+
+def init_rglru_cache(cfg: RGLRUConfig, d_model: int, batch: int, dtype):
+    W = cfg.width or d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, W), dtype),
+        "h": jnp.zeros((batch, W), jnp.float32),
+    }
+
+
+def _gates(cfg: RGLRUConfig, p, u):
+    r = jax.nn.sigmoid(u @ p["w_a"].astype(u.dtype) + p["b_a"].astype(u.dtype))
+    i = jax.nn.sigmoid(u @ p["w_i"].astype(u.dtype) + p["b_i"].astype(u.dtype))
+    log_sig_lam = jax.nn.log_sigmoid(p["lam"].astype(jnp.float32))
+    log_a = cfg.c * r.astype(jnp.float32) * log_sig_lam  # (…, W), negative
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i.astype(jnp.float32) * u.astype(jnp.float32)
+    )
+    return a, gated
+
+
+def rglru_forward(cfg: RGLRUConfig, p, x, *, cache=None):
+    """x (B,S,d_model) -> (B,S,d_model); writes final state into cache."""
+    B, S, _ = x.shape
+    side = jax.nn.gelu(x @ p["w_side"].astype(x.dtype))
+    u = x @ p["w_main"].astype(x.dtype)
+    # causal depthwise conv
+    pad = cfg.conv_width - 1
+    up = jnp.pad(u, ((0, 0), (pad, 0), (0, 0)))
+    if cache is not None:
+        up = up.at[:, :pad].set(cache["conv"].astype(u.dtype))
+    cw = p["conv_w"].astype(x.dtype)
+    uc = sum(
+        up[:, i : i + S] * cw[i][None, None, :] for i in range(cfg.conv_width)
+    ) + p["conv_b"].astype(x.dtype)
+
+    a, gated = _gates(cfg, p, uc)
+    h0 = cache["h"] if cache is not None else jnp.zeros_like(gated[:, 0])
+    # include initial state by folding it into the first input
+    gated = gated.at[:, 0].add(a[:, 0] * h0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    y = (h.astype(x.dtype) * side) @ p["w_out"].astype(x.dtype)
+    new_cache = None
+    if cache is not None:
+        new_cache = {
+            "conv": u[:, S - pad :, :].astype(cache["conv"].dtype),
+            "h": h[:, -1],
+        }
+    return y, new_cache
+
+
+def rglru_decode(cfg: RGLRUConfig, p, x, cache):
+    """x (B,1,d_model); O(1) state update."""
+    B = x.shape[0]
+    side = jax.nn.gelu(x[:, 0] @ p["w_side"].astype(x.dtype))
+    u = x[:, 0] @ p["w_main"].astype(x.dtype)  # (B,W)
+    hist = cache["conv"].astype(x.dtype)
+    full = jnp.concatenate([hist, u[:, None, :]], axis=1)
+    cw = p["conv_w"].astype(x.dtype)
+    uc = jnp.einsum("bwc,wc->bc", full, cw) + p["conv_b"].astype(x.dtype)
+    a, gated = _gates(cfg, p, uc)
+    h = a * cache["h"] + gated
+    y = (h.astype(x.dtype) * side) @ p["w_out"].astype(x.dtype)
+    return y[:, None, :], {"conv": full[:, 1:, :].astype(cache["conv"].dtype),
+                           "h": h}

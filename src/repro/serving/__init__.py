@@ -1,0 +1,10 @@
+"""Serving substrate: jitted steps, real-compute engine/cluster, calibrated
+iteration-level cluster simulator."""
+
+from .steps import (  # noqa: F401
+    init_server_state,
+    make_decode_step,
+    make_mixed_step,
+    make_prefill_step,
+)
+from .engine_sim import ClusterEngine, EngineConfig, EngineMetrics  # noqa: F401

@@ -1,0 +1,69 @@
+"""Logical-axis -> mesh-axis rules, with automatic divisibility fallback.
+
+Strategy: tensor-parallel over the mesh "model" axis (heads / ff / vocab /
+expert), FSDP over "data" (and optionally "pod") on the "embed" axis, batch
+over ("pod","data").  Any logical axis whose dimension is not divisible by
+its mesh-axis size *anywhere* in the def tree is demoted to replicated --
+this is what lets 14-head / odd-vocab archs share one rule set (the waste is
+visible in the roofline's MODEL_FLOPS/HLO ratio, by design).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.params import DEFAULT_RULES, _walk, partition_specs
+
+__all__ = ["make_rules", "batch_spec", "state_shardings", "auto_demote"]
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return int(mesh.shape[axis])
+
+
+def make_rules(mesh: Mesh, *, fsdp: bool = True,
+               fsdp_axis="data", overrides: dict | None = None) -> dict:
+    rules = dict(DEFAULT_RULES)
+    if fsdp:
+        # FSDP shards the "embed" axis; expert_ff stays replicated (expert
+        # weights are already 2D-sharded via expert x embed).
+        rules["embed"] = fsdp_axis
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def auto_demote(defs: dict, rules: dict, mesh: Mesh) -> dict:
+    """Replicate any logical axis that does not divide everywhere it occurs."""
+    bad: set[str] = set()
+    for _, d in _walk(defs):
+        for dim, ax in zip(d.shape, d.axes):
+            if ax is None or rules.get(ax) is None:
+                continue
+            if dim % _axis_size(mesh, rules[ax]) != 0:
+                bad.add(ax)
+    out = dict(rules)
+    for ax in bad:
+        out[ax] = None
+    return out
+
+
+def batch_spec(mesh: Mesh) -> P:
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    return P(tuple(axes) if len(axes) > 1 else axes[0])
+
+
+def state_shardings(defs: dict, mesh: Mesh, rules: dict):
+    """NamedSharding trees for params and AdamW moments (same layout)."""
+    specs = partition_specs(defs, rules)
+    import jax
+
+    to_ns = lambda spec: NamedSharding(mesh, spec)
+    p_sh = jax.tree.map(to_ns, specs,
+                        is_leaf=lambda x: isinstance(x, P))
+    return p_sh

@@ -1,0 +1,126 @@
+"""Config registry / shape / dry-run-support tests (no big compiles)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import (ARCHS, SHAPES, all_cells, get_config, input_specs,
+                           skip_reason, supported_shapes)
+from repro.launch.hlo_analysis import collective_traffic
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import roofline_terms
+from repro.models.config import segment_layers
+
+
+def test_registry_complete():
+    assert len(ARCHS) == 10
+    assert len(SHAPES) == 4
+    assert len(all_cells()) == 40
+
+
+def test_exact_published_configs():
+    spec = {
+        "whisper-base": (6, 512, 2048, 51865),
+        "deepseek-v3-671b": (61, 7168, 18432, 129280),
+        "grok-1-314b": (64, 6144, 32768, 131072),
+        "deepseek-67b": (95, 8192, 22016, 102400),
+        "qwen2-0.5b": (24, 896, 4864, 151936),
+        "gemma2-2b": (26, 2304, 9216, 256000),
+        "phi4-mini-3.8b": (32, 3072, 8192, 200064),
+        "recurrentgemma-2b": (26, 2560, 7680, 256000),
+        "mamba2-130m": (24, 768, 0, 50280),
+        "paligemma-3b": (18, 2048, 16384, 257216),
+    }
+    for arch, (L, d, ff, V) in spec.items():
+        cfg = get_config(arch)
+        assert (cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab_size) == (
+            L, d, ff, V), arch
+    # head / kv-head / MoE structure
+    assert get_config("deepseek-v3-671b").mla.n_heads == 128
+    assert get_config("deepseek-v3-671b").moe.n_experts == 256
+    assert get_config("deepseek-v3-671b").moe.top_k == 8
+    assert get_config("grok-1-314b").attn.n_kv_heads == 8
+    assert get_config("grok-1-314b").moe.top_k == 2
+    assert get_config("qwen2-0.5b").attn.qkv_bias
+    assert get_config("gemma2-2b").logit_softcap == 30.0
+    assert get_config("recurrentgemma-2b").pattern == ("rec", "rec",
+                                                       "attn_local")
+    assert get_config("mamba2-130m").ssm.d_state == 128
+    assert get_config("paligemma-3b").vision.n_patches == 256
+
+
+def test_long_500k_skip_rules():
+    """long_500k runs for SSM/hybrid/local-global, skips pure full-attn."""
+    runs = {a for a in ARCHS
+            if skip_reason(get_config(a), "long_500k") is None}
+    assert runs == {"mamba2-130m", "recurrentgemma-2b", "gemma2-2b"}
+    for a in ARCHS:
+        assert skip_reason(get_config(a), "train_4k") is None
+        assert skip_reason(get_config(a), "decode_32k") is None
+
+
+def test_input_specs_shapes():
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        for s in supported_shapes(cfg):
+            spec = input_specs(cfg, s)
+            sh = SHAPES[s]
+            assert spec["tokens"].shape[0] == sh.global_batch
+            if sh.kind == "decode":
+                assert spec["tokens"].shape == (sh.global_batch, 1)
+            else:
+                assert spec["tokens"].shape[1] == sh.seq_len
+            if sh.kind != "decode":
+                if cfg.encoder is not None:
+                    assert "enc_frames" in spec
+                if cfg.vision is not None:
+                    assert "prefix_embeds" in spec
+
+
+def test_segment_compression():
+    """Layer patterns compress into few segments (small HLO guarantee)."""
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        segs = segment_layers(cfg.block_specs())
+        assert sum(len(b) * r for b, r in segs) == cfg.n_layers
+        assert len(segs) <= 3, (arch, len(segs))
+
+
+def test_make_production_mesh_shapes():
+    # NB: under --xla_force_host_platform_device_count this builds real
+    # meshes; in the plain test env we only validate the factory's math via
+    # the error path (1 CPU device cannot host 256).
+    with pytest.raises(ValueError):
+        make_production_mesh()
+
+
+def test_collective_parser_kinds():
+    txt = """
+  %ag = bf16[32,64]{1,0} all-gather(%p), replica_groups=[16,16]<=[256], dimensions={0}
+  %rs = f32[128,128]{1,0} reduce-scatter(%q), replica_groups=[2,8]<=[16], to_apply=%add
+  %cp = f32[4,4]{1,0} collective-permute(%r), source_target_pairs={{0,1},{1,0}}
+  %noop = f32[4,4]{1,0} collective-permute(%r), source_target_pairs={}
+"""
+    out = collective_traffic(txt)
+    assert out["all-gather"] == pytest.approx(15 / 16 * 32 * 64 * 2)
+    assert out["reduce-scatter"] == pytest.approx(7 / 8 * 128 * 128 * 4)
+    assert out["collective-permute"] == pytest.approx(4 * 4 * 4)
+    assert out["counts"]["all-gather"] == 1
+
+
+def test_roofline_terms_math():
+    rec = {
+        "extrapolated": {"flops": 197e12 * 0.5, "bytes": 819e9 * 2.0,
+                         "coll_total": 50e9 * 0.25},
+        "n_devices": 256,
+        "model_flops": 197e12 * 0.25 * 256,
+        "memory": {"argument_bytes": 819e9 * 1.0},
+    }
+    t = roofline_terms(rec)
+    assert t["compute_s"] == pytest.approx(0.5)
+    assert t["memory_s"] == pytest.approx(2.0)
+    assert t["collective_s"] == pytest.approx(0.25)
+    assert t["dominant"] == "memory"
+    # ideal = max(0.25 compute, 1.0 memory) = 1.0; bound = 2.0
+    assert t["roofline_fraction"] == pytest.approx(0.5)

@@ -1,0 +1,181 @@
+"""Tests for the per-server iteration-level cluster engine."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.online import OnlineController, OnlineControllerConfig
+from repro.core.planning import SLISpec, solve_bundled_lp
+from repro.core.policies import (
+    ablation_policy,
+    baseline_distserve,
+    baseline_sarathi,
+    baseline_vllm,
+    gate_and_route,
+    sli_aware_policy,
+)
+from repro.core.types import Pricing, ServicePrimitives, WorkloadClass
+from repro.data.traces import Request, TraceConfig, synth_azure_trace, trace_class_means
+from repro.serving.engine_sim import ClusterEngine, EngineConfig
+
+PRIM = ServicePrimitives()
+PRICE = Pricing(0.1, 0.2)
+
+
+def _mk(seed=42, compression=0.05, horizon=40.0):
+    trace = synth_azure_trace(
+        TraceConfig(horizon=horizon, base_rate=2.0, compression=compression,
+                    seed=seed)
+    )
+    means = trace_class_means(trace, 2)
+    classes = [
+        WorkloadClass(n, m[0], m[1], m[2] / 10, patience=3e-4)
+        for n, m in zip(("code", "conv"), means)
+    ]
+    plan = solve_bundled_lp(classes, PRIM, PRICE,
+                            sli=SLISpec(pin_zero_decode_queue=True))
+    return trace, classes, plan
+
+
+def _run(trace, classes, pol, n=10, seed=1, horizon=60.0, controller=None,
+         drain=False, **kw):
+    eng = ClusterEngine(
+        classes, pol, EngineConfig(PRIM, PRICE, n_servers=n, seed=seed, **kw),
+        controller=controller,
+    )
+    m = eng.run(trace, horizon=horizon, drain=drain)
+    return eng, m
+
+
+def test_determinism():
+    trace, classes, plan = _mk()
+    _, m1 = _run(trace, classes, gate_and_route(plan))
+    _, m2 = _run(trace, classes, gate_and_route(plan))
+    assert m1.revenue == m2.revenue
+    assert m1.completions == m2.completions
+
+
+def test_bundled_revenue_accounting():
+    trace, classes, plan = _mk()
+    eng, m = _run(trace, classes, gate_and_route(plan))
+    per_class = m.per_class_completions
+    # each completed request credits exactly w = c_p P + c_d D; since lengths
+    # vary per request we check totals against engine-internal tallies instead:
+    assert m.revenue > 0
+    assert m.completions == sum(per_class.values())
+
+
+def test_separate_revenue_geq_prefill_part():
+    trace, classes, plan = _mk()
+    from repro.core.policies import prioritize_and_route
+    from repro.core.planning import solve_separate_lp
+
+    sp = solve_separate_lp(classes, PRIM, PRICE)
+    eng, m = _run(trace, classes, prioritize_and_route(sp))
+    assert m.revenue > 0
+
+
+def test_ttft_lower_bound():
+    """TTFT cannot beat the physical prefill time + one decode iteration."""
+    classes = [WorkloadClass("only", 512, 16, 0.1, 0.0)]
+    reqs = [Request(0, 0.0, 0, 512, 16)]
+    plan = solve_bundled_lp(classes, PRIM, PRICE)
+    eng, m = _run(reqs, classes, gate_and_route(plan), n=2, horizon=60.0,
+                  drain=True)
+    assert m.completions == 1
+    n_chunks = int(np.ceil(512 / PRIM.chunk))
+    t_prefill = n_chunks * (PRIM.alpha + PRIM.beta * PRIM.chunk)
+    assert m.ttft[0] >= t_prefill * 0.99
+
+
+def test_congested_ordering_matches_paper():
+    """Table 2 qualitative claim: gate-and-route out-earns the baselines."""
+    trace, classes, plan = _mk(compression=0.02, horizon=60.0)
+    _, m_ours = _run(trace, classes, gate_and_route(plan), horizon=90.0)
+    _, m_sar = _run(trace, classes, baseline_sarathi(plan), horizon=90.0,
+                    sarathi_budget=True)
+    _, m_vllm = _run(trace, classes, baseline_vllm(plan), horizon=90.0)
+    _, m_dist = _run(trace, classes, baseline_distserve(plan, k=4), horizon=90.0)
+    assert m_ours.revenue_rate() > m_sar.revenue_rate()
+    assert m_ours.revenue_rate() > m_vllm.revenue_rate()
+    assert m_ours.revenue_rate() > m_dist.revenue_rate()
+
+
+def test_failure_recovery_and_elasticity():
+    trace, classes, plan = _mk(compression=0.05)
+    ctrl = OnlineController(classes, PRIM, PRICE, n=10)
+    events = [(5.0, "fail", 0), (6.0, "fail", 1), (20.0, "recover", 0),
+              (8.0, "straggle", 2, 3.0)]
+    eng, m = _run(
+        trace, classes, gate_and_route(plan), controller=ctrl,
+        horizon=60.0,
+    )
+    # re-run with failures; engine must stay consistent and keep completing
+    eng2 = ClusterEngine(
+        classes, gate_and_route(plan),
+        EngineConfig(PRIM, PRICE, n_servers=10, seed=1), controller=OnlineController(classes, PRIM, PRICE, n=10),
+    )
+    m2 = eng2.run(trace, horizon=60.0, failure_events=events)
+    assert m2.completions > 0
+    assert eng2.n_alive == 9  # one server still down
+    # conservation: nothing lost
+    in_flight = sum(len(s.decodes) + (1 if s.prefill else 0)
+                    + len(s.pending_local) for s in eng2.servers)
+    queued = sum(len(q) for q in eng2.prefill_q) + len(eng2.decode_buf) + len(
+        eng2.decode_buf_solo) + len(eng2.decode_buf_mixed)
+    assert m2.completions + m2.abandons + in_flight + queued == m2.arrivals
+    # failures cost some throughput vs the clean run
+    assert m2.completions <= m.completions
+
+
+def test_online_controller_replans():
+    trace, classes, plan = _mk()
+    ctrl = OnlineController(
+        classes, PRIM, PRICE, n=10,
+        config=OnlineControllerConfig(replan_every=5.0),
+    )
+    eng, m = _run(trace, classes, gate_and_route(plan), controller=ctrl)
+    assert ctrl.replan_count >= 5
+    assert ctrl.plan is not None
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.sampled_from(
+    ["GG-SP", "FI-WSP", "GI-WSP", "GF-WSP", "FG-SP"]))
+def test_conservation_property(seed, which):
+    """Pathwise conservation for every ablation policy on random traces."""
+    rng = np.random.default_rng(seed)
+    classes = [
+        WorkloadClass("a", 300, 50, 0.5, 1e-3),
+        WorkloadClass("b", 900, 120, 0.5, 1e-3),
+    ]
+    reqs = []
+    t = 0.0
+    for rid in range(rng.integers(5, 60)):
+        t += rng.exponential(0.3)
+        cls = int(rng.integers(2))
+        reqs.append(Request(rid, t, cls,
+                            int(rng.integers(64, 2048)),
+                            int(rng.integers(4, 256))))
+    plan = solve_bundled_lp(classes, PRIM, PRICE)
+    pol = ablation_policy(plan, which)
+    eng = ClusterEngine(classes, pol,
+                        EngineConfig(PRIM, PRICE, n_servers=4, seed=seed))
+    m = eng.run(reqs, horizon=t + 1.0, drain=True)
+    in_flight = sum(len(s.decodes) + (1 if s.prefill else 0)
+                    + len(s.pending_local) for s in eng.servers)
+    queued = sum(len(q) for q in eng.prefill_q) + len(eng.decode_buf) + len(
+        eng.decode_buf_solo) + len(eng.decode_buf_mixed)
+    assert m.completions + m.abandons + in_flight + queued == m.arrivals
+    # capacity invariants
+    for s in eng.servers:
+        cap = eng._decode_cap(s)
+        assert len(s.decodes) <= cap
+        assert s.prefill is None or s.group == "mixed" or pol.partition == "none"
+
+
+def test_sli_router_routes_to_pools():
+    trace, classes, plan = _mk()
+    pol = sli_aware_policy(plan, general=True)
+    eng, m = _run(trace, classes, pol)
+    assert m.completions > 0

@@ -1,0 +1,90 @@
+"""Fluid-limit and CTMC consistency tests (Theorems 1, 2, 4 behaviour)."""
+
+import numpy as np
+import pytest
+
+from repro.core.fluid import fluid_steady_state
+from repro.core.planning import SLISpec, solve_bundled_lp
+from repro.core.policies import gate_and_route, sli_aware_policy
+from repro.core.simulator import CTMCSimulator
+from repro.core.types import Pricing, ServicePrimitives, WorkloadClass
+
+C0 = WorkloadClass("decode_heavy", 300, 1000, arrival_rate=0.5, patience=0.1)
+C1 = WorkloadClass("prefill_heavy", 3000, 400, arrival_rate=0.5, patience=0.1)
+PRIM = ServicePrimitives()
+PRICE = Pricing(0.1, 0.2)
+CLASSES = [C0, C1]
+
+
+@pytest.fixture(scope="module")
+def plan():
+    return solve_bundled_lp(CLASSES, PRIM, PRICE,
+                            sli=SLISpec(pin_zero_decode_queue=True))
+
+
+def test_fluid_converges_to_lp(plan):
+    ss = fluid_steady_state(CLASSES, PRIM, PRICE, plan, horizon=300.0, dt=2e-3)
+    # Theorem 2 (fluid version): prefill occupancy -> x*, revenue -> R*.
+    np.testing.assert_allclose(ss["x"], plan.x, atol=5e-3)
+    assert ss["revenue_rate"] == pytest.approx(plan.revenue_rate, rel=0.02)
+    # Decode buffer drains (Prop. EC.1).
+    assert np.all(ss["qd"] < 5e-3)
+    # Prefill queues converge to q_p* (Lemma EC.3).
+    np.testing.assert_allclose(ss["qp"], plan.qp, atol=2e-2)
+
+
+def test_fluid_randomized_router_hits_pool_targets(plan):
+    ss = fluid_steady_state(
+        CLASSES, PRIM, PRICE, plan, horizon=300.0, dt=2e-3,
+        randomized_router=True,
+    )
+    # Theorem 4: class-level decode occupancies converge to (y_m*, y_s*).
+    np.testing.assert_allclose(ss["ym"], plan.ym, atol=1.5e-2)
+    np.testing.assert_allclose(ss["ys"], plan.ys, atol=1.5e-2)
+
+
+def test_ctmc_revenue_approaches_fluid_optimum(plan):
+    pol = gate_and_route(plan)
+    res = CTMCSimulator(CLASSES, PRIM, PRICE, pol, n=200, seed=1).run(
+        horizon=150.0, warmup=50.0
+    )
+    assert res.revenue_rate_per_server == pytest.approx(
+        plan.revenue_rate, rel=0.08
+    )
+    # occupancy convergence (Theorem 2 / EC.8.5 figure behaviour)
+    np.testing.assert_allclose(res.avg_x, plan.x, atol=0.02)
+
+
+def test_ctmc_sli_router_occupancy_convergence(plan):
+    pol = sli_aware_policy(plan)
+    res = CTMCSimulator(CLASSES, PRIM, PRICE, pol, n=200, seed=2).run(
+        horizon=150.0, warmup=50.0
+    )
+    np.testing.assert_allclose(res.avg_ym, plan.ym, atol=0.12)
+    np.testing.assert_allclose(res.avg_ys, plan.ys, atol=0.12)
+
+
+def test_ctmc_scaling_improves_accuracy(plan):
+    pol = gate_and_route(plan)
+    errs = []
+    for n in (20, 200):
+        res = CTMCSimulator(CLASSES, PRIM, PRICE, pol, n=n, seed=3).run(
+            horizon=120.0, warmup=40.0
+        )
+        errs.append(abs(res.revenue_rate_per_server - plan.revenue_rate))
+    assert errs[1] <= errs[0] + 1e-9
+
+
+def test_ctmc_conservation_laws(plan):
+    """Pathwise flow conservation: arrivals = completions + abandons + in-system."""
+    pol = gate_and_route(plan)
+    sim = CTMCSimulator(CLASSES, PRIM, PRICE, pol, n=50, seed=4)
+    res = sim.run(horizon=60.0, warmup=0.0)
+    in_system = sim.Qp + sim.X + sim.Qdm + sim.Qds + sim.Ym + sim.Ys
+    lhs = res.arrivals
+    rhs = res.completions + res.abandons_p + res.abandons_d + in_system
+    np.testing.assert_allclose(lhs, rhs, atol=1e-9)
+    # capacity constraints held at the end state
+    assert sim.X.sum() <= sim.M + 1e-9
+    assert sim.Ym.sum() <= (sim.B - 1) * sim.M + 1e-9
+    assert sim.Ys.sum() <= sim.B * (sim.n - sim.M) + 1e-9

@@ -1,0 +1,107 @@
+"""Unit + property tests for the dense simplex solver (core/lp.py)."""
+
+import itertools
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lp import LPInfeasible, LPUnbounded, linprog_max
+
+
+def test_textbook_max():
+    # max 3x + 5y s.t. x <= 4, 2y <= 12, 3x + 2y <= 18  -> (2, 6), obj 36
+    res = linprog_max(
+        c=[3, 5],
+        A_ub=[[1, 0], [0, 2], [3, 2]],
+        b_ub=[4, 12, 18],
+    )
+    assert res.fun == pytest.approx(36.0)
+    assert res.x == pytest.approx([2.0, 6.0])
+    # duals: y = (0, 3/2, 1)
+    assert res.dual_ub == pytest.approx([0.0, 1.5, 1.0])
+
+
+def test_equality_constraints():
+    # max x + 2y s.t. x + y == 1 -> (0, 1), obj 2, dual 2
+    res = linprog_max(c=[1, 2], A_eq=[[1, 1]], b_eq=[1])
+    assert res.fun == pytest.approx(2.0)
+    assert res.x == pytest.approx([0.0, 1.0])
+    assert res.dual_eq == pytest.approx([2.0])
+
+
+def test_infeasible():
+    with pytest.raises(LPInfeasible):
+        linprog_max(c=[1], A_ub=[[1]], b_ub=[-1], A_eq=[[1]], b_eq=[5])
+
+
+def test_unbounded():
+    with pytest.raises(LPUnbounded):
+        linprog_max(c=[1, 0], A_ub=[[0, 1]], b_ub=[1])
+
+
+def test_degenerate_redundant_rows():
+    # Redundant equalities should not break phase 2 / dual recovery.
+    res = linprog_max(
+        c=[1, 1],
+        A_eq=[[1, 1], [2, 2]],
+        b_eq=[1, 2],
+        A_ub=[[1, 0]],
+        b_ub=[0.25],
+    )
+    assert res.fun == pytest.approx(1.0)
+
+
+def _brute_force_vertices(c, A_ub, b_ub, tol=1e-9):
+    """Enumerate basic feasible vertices of {A x <= b, x >= 0} (tiny LPs)."""
+    n = len(c)
+    A = np.vstack([A_ub, -np.eye(n)])
+    b = np.concatenate([b_ub, np.zeros(n)])
+    best = None
+    for rows in itertools.combinations(range(A.shape[0]), n):
+        M = A[list(rows)]
+        if abs(np.linalg.det(M)) < 1e-12:
+            continue
+        v = np.linalg.solve(M, b[list(rows)])
+        if np.all(A @ v <= b + tol):
+            val = float(np.dot(c, v))
+            if best is None or val > best:
+                best = val
+    return best
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_matches_vertex_enumeration(data):
+    n = data.draw(st.integers(2, 4))
+    m = data.draw(st.integers(1, 4))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**32 - 1)))
+    c = rng.normal(size=n)
+    A = rng.normal(size=(m, n))
+    b = rng.uniform(0.5, 2.0, size=m)  # x=0 feasible
+    # Bound the polytope so the LP can't be unbounded.
+    A = np.vstack([A, np.ones((1, n))])
+    b = np.concatenate([b, [5.0]])
+    res = linprog_max(c, A, b)
+    ref = _brute_force_vertices(c, A, b)
+    assert ref is not None
+    assert res.fun == pytest.approx(ref, abs=1e-6)
+    # Feasibility of returned point.
+    assert np.all(A @ res.x <= b + 1e-7)
+    assert np.all(res.x >= -1e-9)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_strong_duality(data):
+    """c'x* == b'y* for (feasible, bounded) random instances."""
+    n = data.draw(st.integers(2, 4))
+    m = data.draw(st.integers(1, 3))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**32 - 1)))
+    c = rng.normal(size=n)
+    A = np.vstack([rng.normal(size=(m, n)), np.ones((1, n))])
+    b = np.concatenate([rng.uniform(0.5, 2.0, size=m), [5.0]])
+    res = linprog_max(c, A, b)
+    assert float(b @ res.dual_ub) == pytest.approx(res.fun, abs=1e-6)
+    # Dual feasibility A'y >= c.
+    assert np.all(A.T @ res.dual_ub >= c - 1e-6)

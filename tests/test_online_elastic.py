@@ -1,0 +1,81 @@
+"""Online controller + elasticity integration tests."""
+
+import numpy as np
+
+from repro.core.online import OnlineController, OnlineControllerConfig
+from repro.core.planning import solve_bundled_lp
+from repro.core.policies import gate_and_route
+from repro.core.types import Pricing, ServicePrimitives, WorkloadClass
+from repro.data.traces import Request, TraceConfig, synth_azure_trace
+from repro.serving.engine_sim import ClusterEngine, EngineConfig
+
+PRIM = ServicePrimitives()
+PRICING = Pricing()
+
+
+def _classes(rate=0.5):
+    return [WorkloadClass("a", 2048, 36, rate, 3e-4),
+            WorkloadClass("b", 1020, 211, rate, 3e-4)]
+
+
+def test_rate_estimator_converges():
+    classes = _classes()
+    ctrl = OnlineController(classes, PRIM, PRICING, n=10,
+                            config=OnlineControllerConfig(safety=1.0))
+    rng = np.random.default_rng(0)
+    t = 0.0
+    true_rates = [4.0, 7.0]  # cluster-level
+    for _ in range(2000):
+        i = 0 if rng.random() < true_rates[0] / sum(true_rates) else 1
+        t += rng.exponential(1.0 / sum(true_rates))
+        ctrl.observe_arrival(t, i)
+    lam = ctrl.estimate_rates(t)  # per-server estimates
+    np.testing.assert_allclose(lam * 10, true_rates, rtol=0.25)
+
+
+def test_replan_cadence_and_capacity_hook():
+    classes = _classes()
+    ctrl = OnlineController(classes, PRIM, PRICING, n=10,
+                            config=OnlineControllerConfig(replan_every=10.0))
+    assert ctrl.maybe_replan(0.0) is not None
+    assert ctrl.maybe_replan(5.0) is None
+    assert ctrl.maybe_replan(10.0) is not None
+    n_replans = ctrl.replan_count
+    ctrl.set_capacity(7, 12.0)  # failure -> immediate replan
+    assert ctrl.replan_count == n_replans + 1
+    assert ctrl.mixed_target() <= 7
+
+
+def test_failure_requeues_and_completes():
+    """Jobs on a failed server are re-prefilled and still complete."""
+    classes = _classes(rate=0.05)
+    plan = solve_bundled_lp(classes, PRIM, PRICING)
+    reqs = [Request(i, 0.1 * i, i % 2, 512, 16, patience=float("inf"))
+            for i in range(20)]
+    evs = [(1.0, "fail", 0), (1.0, "fail", 1), (30.0, "recover", 0),
+           (30.0, "recover", 1)]
+    eng = ClusterEngine(classes, gate_and_route(plan),
+                        EngineConfig(PRIM, PRICING, 4, seed=0))
+    m = eng.run(reqs, horizon=4000.0, failure_events=evs, drain=True)
+    assert m.completions == 20
+    assert m.abandons == 0
+
+
+def test_straggler_slows_but_preserves_work():
+    """A slowed server stretches its own latency ~proportionally but no
+    work is lost (single-server cluster pins the work to the straggler)."""
+    classes = _classes(rate=0.05)
+    plan = solve_bundled_lp(classes, PRIM, PRICING)
+    reqs = [Request(i, 0.05 * i, i % 2, 256, 32, patience=float("inf"))
+            for i in range(8)]
+
+    def run(evs):
+        eng = ClusterEngine(classes, gate_and_route(plan),
+                            EngineConfig(PRIM, PRICING, 1, seed=0))
+        return eng.run(reqs, horizon=8000.0, failure_events=evs, drain=True)
+
+    healthy = run([])
+    slow = run([(0.0, "straggle", 0, 4.0)])
+    assert slow.completions == healthy.completions == 8
+    ratio = np.mean(slow.tpot) / np.mean(healthy.tpot)
+    assert 2.0 < ratio < 6.0  # ~4x slower iterations

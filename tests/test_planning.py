@@ -1,0 +1,137 @@
+"""Planning LP tests: paper Eq. (40)/(42)/(49) structure + Proposition 1."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.planning import (
+    SLISpec,
+    solve_bundled_lp,
+    solve_separate_lp,
+    tpot_of_plan,
+)
+from repro.core.types import Pricing, ServicePrimitives, WorkloadClass, rate_arrays
+
+# The paper's EC.8.5 synthetic instance.
+C0 = WorkloadClass("decode_heavy", prompt_len=300, decode_len=1000,
+                   arrival_rate=0.5, patience=0.1)
+C1 = WorkloadClass("prefill_heavy", prompt_len=3000, decode_len=400,
+                   arrival_rate=0.5, patience=0.1)
+PRIM = ServicePrimitives()
+PRICE = Pricing(c_p=0.1, c_d=0.2)
+
+
+def _check_feasible(plan, tol=1e-7):
+    arr = rate_arrays(plan.classes, plan.prim)
+    B = plan.prim.batch_cap
+    assert plan.x.sum() <= 1 + tol
+    assert plan.ym.sum() <= (B - 1) * plan.x.sum() + tol
+    assert plan.ys.sum() <= B * (1 - plan.x.sum()) + tol
+    np.testing.assert_allclose(
+        arr["mu_p"] * plan.x + arr["theta"] * plan.qp, arr["lam"], atol=1e-6
+    )
+    np.testing.assert_allclose(
+        arr["mu_p"] * plan.x - arr["theta"] * plan.qd,
+        arr["mu_m"] * plan.ym + arr["mu_s"] * plan.ys,
+        atol=1e-6,
+    )
+    assert np.all(plan.x >= -tol) and np.all(plan.qp >= -tol)
+    assert np.all(plan.ym >= -tol) and np.all(plan.ys >= -tol)
+
+
+def test_bundled_lp_solves_and_is_feasible():
+    plan = solve_bundled_lp([C0, C1], PRIM, PRICE)
+    _check_feasible(plan)
+    assert plan.revenue_rate > 0
+    # Underloaded instance: everything is served, revenue equals full offered
+    # reward iff queues are empty.
+    w = np.array([PRICE.bundled_reward(c) for c in (C0, C1)])
+    offered = float((w * np.array([0.5, 0.5])).sum())
+    assert plan.revenue_rate <= offered + 1e-6
+
+
+def test_proposition1_decode_buffer_elimination():
+    """gamma*tau >= (B-1)/B  =>  pinning q_d = 0 costs nothing (Prop 1)."""
+    assert PRIM.solo_efficiency_ok
+    base = solve_bundled_lp([C0, C1], PRIM, PRICE)
+    pinned = solve_bundled_lp([C0, C1], PRIM, PRICE,
+                              sli=SLISpec(pin_zero_decode_queue=True))
+    assert pinned.revenue_rate == pytest.approx(base.revenue_rate, rel=1e-6)
+    assert np.all(np.abs(pinned.qd) < 1e-8)
+
+
+def test_separate_lp_objective_structure():
+    plan = solve_separate_lp([C0, C1], PRIM, PRICE)
+    _check_feasible(plan)
+    val = (
+        PRICE.c_p * PRIM.chunk / PRIM.tau_mix * plan.x.sum()
+        + PRICE.c_d / PRIM.tau_mix * plan.ym.sum()
+        + PRICE.c_d * PRIM.gamma * plan.ys.sum()
+    )
+    assert val == pytest.approx(plan.revenue_rate, rel=1e-9)
+    # Separate charging earns at least the bundled completion revenue rate at
+    # its own optimum evaluated on the same objective.
+    bundled = solve_separate_lp([C0, C1], PRIM, PRICE)
+    assert plan.revenue_rate >= bundled.revenue_rate - 1e-9
+
+
+def test_tpot_cap_binds():
+    eta = 0.024  # between 1/gamma = 0.0089*... and tau
+    plan = solve_bundled_lp([C0, C1], PRIM, PRICE, sli=SLISpec(tpot_cap=eta))
+    assert tpot_of_plan(plan) <= eta + 1e-9
+    loose = solve_bundled_lp([C0, C1], PRIM, PRICE)
+    assert plan.revenue_rate <= loose.revenue_rate + 1e-9
+
+
+def test_prefill_fairness_cap():
+    eta = 0.01
+    plan = solve_bundled_lp([C0, C1], PRIM, PRICE,
+                            sli=SLISpec(prefill_fairness_cap=eta))
+    gaps = plan.x[:, None] - plan.x[None, :]
+    assert gaps.max() <= eta + 1e-9
+
+
+def test_fairness_penalty_reduces_gap():
+    base = solve_bundled_lp([C0, C1], PRIM, PRICE)
+    pen = solve_bundled_lp(
+        [C0, C1], PRIM, PRICE, sli=SLISpec(prefill_fairness_penalty=1e4)
+    )
+    gap = lambda p: float(np.max(p.x[:, None] - p.x[None, :]))
+    assert gap(pen) <= gap(base) + 1e-9
+
+
+def test_mixed_servers_partition():
+    plan = solve_bundled_lp([C0, C1], PRIM, PRICE)
+    n = 10
+    m = plan.mixed_servers(n)
+    assert 0 <= m <= n
+    assert m == int(np.ceil(n * plan.x.sum() - 1e-12))
+
+
+@st.composite
+def _random_instance(draw):
+    I = draw(st.integers(1, 4))
+    classes = []
+    for i in range(I):
+        P = draw(st.floats(50, 4000))
+        D = draw(st.floats(20, 2000))
+        lam = draw(st.floats(0.01, 1.5))
+        th = draw(st.floats(0.01, 0.5))
+        classes.append(WorkloadClass(f"c{i}", P, D, lam, th))
+    B = draw(st.integers(4, 32))
+    return classes, ServicePrimitives(batch_cap=B)
+
+
+@settings(max_examples=30, deadline=None)
+@given(_random_instance())
+def test_lp_always_feasible_and_consistent(inst):
+    classes, prim = inst
+    plan = solve_bundled_lp(classes, prim, PRICE)
+    _check_feasible(plan)
+    # Proposition 1 under the calibrated-regime condition.
+    if prim.solo_efficiency_ok:
+        pinned = solve_bundled_lp(classes, prim, PRICE,
+                                  sli=SLISpec(pin_zero_decode_queue=True))
+        assert pinned.revenue_rate == pytest.approx(
+            plan.revenue_rate, rel=1e-6, abs=1e-9
+        )

@@ -1,0 +1,121 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.lp import linprog_max
+from repro.core.planning import SLISpec, solve_bundled_lp, solve_separate_lp
+from repro.core.simulator import CTMCSimulator
+from repro.core.policies import gate_and_route
+from repro.core.types import Pricing, ServicePrimitives, WorkloadClass
+from repro.launch.hlo_analysis import collective_traffic
+
+
+def _classes(draw_lens, rates, theta=0.1):
+    return [
+        WorkloadClass(f"c{i}", P, D, lam, theta)
+        for i, ((P, D), lam) in enumerate(zip(draw_lens, rates))
+    ]
+
+
+cls_strategy = st.lists(
+    st.tuples(st.integers(50, 4000), st.integers(10, 1500)),
+    min_size=1, max_size=4)
+rate_strategy = st.floats(0.01, 2.0)
+
+
+@given(lens=cls_strategy, lam=rate_strategy,
+       b=st.integers(2, 32), c=st.integers(32, 512))
+@settings(max_examples=40, deadline=None)
+def test_lp_feasibility_invariants(lens, lam, b, c):
+    """LP solutions always satisfy the paper's capacity constraints."""
+    prim = ServicePrimitives(batch_cap=b, chunk=c)
+    classes = _classes(lens, [lam] * len(lens))
+    plan = solve_bundled_lp(classes, prim, Pricing())
+    B = prim.batch_cap
+    assert plan.x.sum() <= 1 + 1e-8
+    assert plan.ym.sum() <= (B - 1) * plan.x.sum() + 1e-6
+    assert plan.ys.sum() <= B * (1 - plan.x.sum()) + 1e-6
+    assert (plan.x >= -1e-9).all() and (plan.qp >= -1e-9).all()
+    # revenue is bounded by serving everything: sum_i w_i * lambda_i
+    ub = sum(Pricing().bundled_reward(k) * k.arrival_rate for k in classes)
+    assert plan.revenue_rate <= ub + 1e-6
+
+
+@given(lens=cls_strategy, lam=rate_strategy)
+@settings(max_examples=25, deadline=None)
+def test_decode_buffer_elimination(lens, lam):
+    """Prop 1: in the calibrated regime (gamma*tau >= (B-1)/B) there is an
+    optimal plan with q_d = 0 -- pinning q_d = 0 must not lose revenue."""
+    prim = ServicePrimitives()
+    assert prim.solo_efficiency_ok
+    classes = _classes(lens, [lam] * len(lens))
+    free = solve_bundled_lp(classes, prim, Pricing())
+    pinned = solve_bundled_lp(classes, prim, Pricing(),
+                              sli=SLISpec(pin_zero_decode_queue=True))
+    assert pinned.revenue_rate >= free.revenue_rate - 1e-6 * max(
+        1.0, abs(free.revenue_rate))
+
+
+@given(lens=cls_strategy, lam=rate_strategy)
+@settings(max_examples=15, deadline=None)
+def test_separate_charging_dominates_bundled_value(lens, lam):
+    """Separate charging recognises prefill value too, so its optimal
+    fluid value is >= the bundled optimum on the same instance."""
+    prim = ServicePrimitives()
+    classes = _classes(lens, [lam] * len(lens))
+    b = solve_bundled_lp(classes, prim, Pricing())
+    s = solve_separate_lp(classes, prim, Pricing())
+    assert s.revenue_rate >= b.revenue_rate - 1e-6 * max(
+        1.0, abs(b.revenue_rate))
+
+
+@given(lens=st.lists(st.tuples(st.integers(100, 2000),
+                               st.integers(20, 800)),
+                     min_size=1, max_size=3),
+       lam=st.floats(0.05, 0.8), seed=st.integers(0, 3))
+@settings(max_examples=8, deadline=None)
+def test_ctmc_conservation(lens, lam, seed):
+    """Pathwise flow balance: arrivals = in-flight + completions +
+    abandons at every stopping time (checked at the horizon)."""
+    prim = ServicePrimitives(batch_cap=8)
+    classes = _classes(lens, [lam] * len(lens))
+    plan = solve_bundled_lp(classes, prim, Pricing())
+    sim = CTMCSimulator(classes, prim, Pricing(), gate_and_route(plan),
+                        n=20, seed=seed)
+    r = sim.run(horizon=40.0)
+    in_flight = (sim.Qp + sim.X + sim.Qdm + sim.Qds + sim.Ym + sim.Ys)
+    lhs = r.arrivals
+    rhs = in_flight + r.completions + r.abandons_p + r.abandons_d
+    np.testing.assert_allclose(lhs, rhs, atol=1e-9)
+    # capacity invariants held at the end state
+    assert sim.X.sum() <= sim.M + 1e-9
+    assert sim.Ym.sum() <= (prim.batch_cap - 1) * sim.M + 1e-9
+    assert sim.Ys.sum() <= prim.batch_cap * (sim.n - sim.M) + 1e-9
+
+
+@given(st.integers(2, 64), st.integers(2, 64), st.integers(2, 16),
+       st.sampled_from(["f32", "bf16"]))
+@settings(max_examples=30, deadline=None)
+def test_collective_parser_allreduce_factor(m, n, k, dt):
+    """all-reduce traffic = 2 (k-1)/k * payload for any iota group."""
+    bytes_per = {"f32": 4, "bf16": 2}[dt]
+    line = (f"  %all-reduce.1 = {dt}[{m},{n}]{{1,0}} all-reduce(%x), "
+            f"channel_id=1, replica_groups=[2,{k}]<=[{2*k}], "
+            f"use_global_device_ids=true, to_apply=%add")
+    out = collective_traffic(line)
+    expect = 2 * (k - 1) / k * m * n * bytes_per
+    np.testing.assert_allclose(out["all-reduce"], expect)
+    assert out["total"] == out["all-reduce"]
+
+
+@given(st.integers(1, 6), st.integers(0, 5))
+@settings(max_examples=20, deadline=None)
+def test_lp_solver_vs_bruteforce_2d(a, b):
+    """Tiny LP sanity: max x+y s.t. x<=a, y<=b, x,y>=0 -> a+b."""
+    import numpy as np
+    c = np.array([1.0, 1.0])
+    A = np.array([[1.0, 0.0], [0.0, 1.0]])
+    res = linprog_max(c, A, np.array([float(a), float(b)]),
+                      np.zeros((0, 2)), np.zeros(0))
+    np.testing.assert_allclose(res.fun, a + b, rtol=1e-9, atol=1e-9)
