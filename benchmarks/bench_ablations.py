@@ -3,18 +3,18 @@
 GG-SP (full) vs FI-WSP (~Sarathi), GI-WSP, GF-WSP, FG-SP across varied
 infrastructure hyperparameters and class mixes; reports normalized mean
 revenue (+/- std) per policy, expecting GG-SP best.
+
+Each hyperparameter instance is one workload mix of a single CTMC sweep
+(:mod:`repro.sweep`); this module only normalises and ranks the cells.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.planning import solve_bundled_lp
-from repro.core.policies import ablation_policy
-from repro.core.simulator import CTMCSimulator
-from repro.core.types import Pricing, ServicePrimitives, WorkloadClass
+from repro.sweep import MixSpec, SweepSpec, run_sweep
 
-from .common import fmt_table, save
+from .common import ART, fmt_table, save
 
 VARIANTS = ("GG-SP", "FI-WSP", "GI-WSP", "GF-WSP", "FG-SP")
 
@@ -31,24 +31,39 @@ def _instances(quick: bool):
     return grids[:2] if quick else grids
 
 
+def _mix(idx: int, inst: dict) -> MixSpec:
+    return MixSpec(
+        name=f"inst{idx}",
+        classes=(
+            dict(name="c0", prompt_len=inst["P"][0], decode_len=inst["D"][0],
+                 arrival_rate=inst["lam"], patience=0.1),
+            dict(name="c1", prompt_len=inst["P"][1], decode_len=inst["D"][1],
+                 arrival_rate=inst["lam"], patience=0.1),
+        ),
+        prim=dict(alpha=inst["alpha"], beta=inst["beta"],
+                  gamma=inst["gamma"]),
+        pricing=dict(c_p=0.1, c_d=0.2),
+    )
+
+
 def run(quick: bool = True) -> dict:
     n = 100 if quick else 500
     horizon, warmup = (200.0, 50.0) if quick else (400.0, 100.0)
-    per_variant = {v: [] for v in VARIANTS}
-    for inst in _instances(quick):
-        prim = ServicePrimitives(alpha=inst["alpha"], beta=inst["beta"],
-                                 gamma=inst["gamma"])
-        pricing = Pricing(0.1, 0.2)
-        classes = [
-            WorkloadClass("c0", inst["P"][0], inst["D"][0], inst["lam"], 0.1),
-            WorkloadClass("c1", inst["P"][1], inst["D"][1], inst["lam"], 0.1),
-        ]
-        plan = solve_bundled_lp(classes, prim, pricing)
-        for v in VARIANTS:
-            sim = CTMCSimulator(classes, prim, pricing,
-                                ablation_policy(plan, v), n=n, seed=0)
-            r = sim.run(horizon, warmup=warmup)
-            per_variant[v].append(r.revenue_rate_per_server)
+    mixes = tuple(_mix(i, inst)
+                  for i, inst in enumerate(_instances(quick)))
+    spec = SweepSpec(
+        name="ablations", evaluator="ctmc", policies=VARIANTS,
+        n_servers=(n,), n_seeds=1, seed=0, mixes=mixes,
+        horizon=horizon, warmup=warmup,
+        # paired comparison: every variant sees the same RNG streams, as
+        # the original single-seed loop did (variance-reduced ranking)
+        extra={"crn_policies": True})
+    res = run_sweep(spec)
+    per_variant = {
+        v: [res.mean_over_seeds("revenue_rate", mix=m.name, policy=v, n=n)
+            for m in mixes]
+        for v in VARIANTS
+    }
     # normalise within each instance by the best policy
     arr = np.array([per_variant[v] for v in VARIANTS])  # (V, inst)
     norm = arr / arr.max(axis=0, keepdims=True)
@@ -60,7 +75,9 @@ def run(quick: bool = True) -> dict:
     print(fmt_table(rows, ["variant", "norm_revenue_mean",
                            "norm_revenue_std"],
                     "\n[ablations] EC.8.6 component ablations"))
-    out = {"rows": rows, "ggsp_best": rows[0]["variant"] == "GG-SP"}
+    artifact = res.save(ART.parent / "sweep" / "ablations.json")
+    out = {"rows": rows, "ggsp_best": rows[0]["variant"] == "GG-SP",
+           "sweep_artifact": str(artifact)}
     save("ablations", out)
     return out
 

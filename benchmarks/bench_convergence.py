@@ -9,60 +9,69 @@ SLI-aware randomized router.  Checks:
 * decode occupancies (y_m+y_s per class) -> LP targets under the
   SLI-aware router (Theorem 4) but not necessarily under plain
   gate-and-route (the paper's Fig. EC.6 observation).
+
+Grid execution is delegated to :mod:`repro.sweep`; this module only
+aggregates the sweep cells into the paper's table.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.planning import SLISpec, solve_bundled_lp
-from repro.core.policies import gate_and_route, sli_aware_policy
-from repro.core.simulator import CTMCSimulator
-from repro.core.types import Pricing, ServicePrimitives, WorkloadClass
+from repro.sweep import SweepSpec, run_sweep
+from repro.sweep.run import default_mix
 
-from .bench_sli_pareto import CLASSES
-from .common import fmt_table, save
+from .common import ART, fmt_table, save
 
-PRIM = ServicePrimitives()
-PRICING = Pricing(0.1, 0.2)
+POLICIES = ("gate_and_route", "sli_aware")
 
 
 def run(quick: bool = True) -> dict:
-    plan = solve_bundled_lp(CLASSES, PRIM, PRICING)
-    plan_sli = solve_bundled_lp(CLASSES, PRIM, PRICING,
-                                sli=SLISpec(pin_zero_decode_queue=True))
-    ns = [20, 50, 200] if quick else [5, 20, 50, 200, 500]
-    seeds = [0, 1] if quick else [0, 1, 2, 3, 4]
+    ns = (20, 50, 200) if quick else (5, 20, 50, 200, 500)
+    n_seeds = 2 if quick else 5
     horizon, warmup = (300.0, 75.0) if quick else (600.0, 150.0)
-    rows, occ = [], []
+    spec = SweepSpec(
+        name="convergence", evaluator="ctmc", policies=POLICIES,
+        n_servers=ns, n_seeds=n_seeds, seed=0,
+        mixes=(default_mix("two_class"),),
+        horizon=horizon, warmup=warmup,
+        # paired comparison: both policies see the same streams, as the
+        # original shared-seed loop did
+        extra={"crn_policies": True})
+    res = run_sweep(spec)
+    I = len(spec.mixes[0].classes)
+
+    rows = []
     for n in ns:
-        for name, pol in (("gate_and_route", gate_and_route(plan)),
-                          ("sli_aware", sli_aware_policy(plan_sli))):
-            revs, xs, ys = [], [], []
-            for seed in seeds:
-                sim = CTMCSimulator(CLASSES, PRIM, PRICING, pol, n=n,
-                                    seed=seed)
-                r = sim.run(horizon, warmup=warmup)
-                revs.append(r.revenue_rate_per_server)
-                xs.append(r.avg_x)
-                ys.append(r.avg_ym + r.avg_ys)
-            p = pol.plan
-            rev = float(np.mean(revs))
-            x_err = float(np.abs(np.mean(xs, 0) - p.x).sum())
-            y_err = float(np.abs(np.mean(ys, 0) - (p.ym + p.ys)).sum())
+        for name in POLICIES:
+            sel = res.select(policy=name, n=n)
+            rev = float(np.mean([c.metrics["revenue_rate"] for c in sel]))
+            r_star = sel[0].metrics["R_star"]
+            # error of the seed-averaged occupancies vs the LP targets
+            x_mean = np.array([np.mean([c.metrics[f"avg_x/{i}"] for c in sel])
+                               for i in range(I)])
+            y_mean = np.array([np.mean([c.metrics[f"avg_y/{i}"] for c in sel])
+                               for i in range(I)])
+            x_star = np.array([sel[0].metrics[f"x_star/{i}"]
+                               for i in range(I)])
+            y_star = np.array([sel[0].metrics[f"y_star/{i}"]
+                               for i in range(I)])
             rows.append({"n": n, "policy": name,
                          "rev_per_server": round(rev, 2),
-                         "R_star": round(p.revenue_rate, 2),
-                         "gap_pct": round(100 * (1 - rev / p.revenue_rate),
-                                          2),
-                         "x_err_l1": round(x_err, 4),
-                         "y_err_l1": round(y_err, 4)})
+                         "R_star": round(r_star, 2),
+                         "gap_pct": round(100 * (1 - rev / r_star), 2),
+                         "x_err_l1": round(float(np.abs(x_mean - x_star)
+                                                 .sum()), 4),
+                         "y_err_l1": round(float(np.abs(y_mean - y_star)
+                                                 .sum()), 4)})
     print(fmt_table(rows, ["n", "policy", "rev_per_server", "R_star",
                            "gap_pct", "x_err_l1", "y_err_l1"],
                     "\n[convergence] per-server revenue & occupancy vs n"))
     gr = [r for r in rows if r["policy"] == "gate_and_route"]
+    artifact = res.save(ART.parent / "sweep" / "convergence.json")
     out = {"rows": rows,
-           "gap_shrinks": abs(gr[-1]["gap_pct"]) <= abs(gr[0]["gap_pct"])}
+           "gap_shrinks": abs(gr[-1]["gap_pct"]) <= abs(gr[0]["gap_pct"]),
+           "sweep_artifact": str(artifact)}
     save("convergence", out)
     return out
 

@@ -3,35 +3,56 @@
 Holds per-server offered load fixed (cluster size x compression constant)
 and grows the cluster: (10, c), (20, c/2), (40, c/4).  Checks that the
 revenue ranking -- online gate-and-route first -- is stable across scale.
+
+The whole (policy x n) grid runs as one "engine" sweep
+(:mod:`repro.sweep`): the mix's ``compression_per_server`` keeps per-server
+load constant, and the DistServe comparator's fixed splits are the
+``frac=0.2`` / ``frac=0.5`` policy tokens (k = n/5 and n/2, the same two
+splits the serial loop used to scan).
 """
 
 from __future__ import annotations
 
-from repro.data.traces import TraceConfig, synth_azure_trace
+from repro.sweep import MixSpec, SweepSpec, run_sweep
 
-from .common import best_fixed_split, fmt_table, run_trace_policy, save
+from .common import ART, fmt_table, save
+
+DIRECT = ("gate_and_route", "sarathi", "vllm")
+DISTSERVE = ("distserve_mix_solo:frac=0.2", "distserve_mix_solo:frac=0.5")
 
 
 def run(quick: bool = True) -> dict:
     base_comp = 0.3
-    ns = [10, 20] if quick else [10, 20, 40]
+    horizon = 240.0
+    ns = (10, 20) if quick else (10, 20, 40)
+    mix = MixSpec(name="azure",
+                  trace=dict(horizon=horizon,
+                             compression_per_server=base_comp, seed=42))
+    spec = SweepSpec(
+        name="scale_sweep", evaluator="engine",
+        policies=DIRECT + DISTSERVE, n_servers=ns, n_seeds=1, seed=42,
+        mixes=(mix,), horizon=horizon,
+        # paired ranking: all policies replay the trace under the same
+        # engine streams, as the original shared-seed loop did
+        extra={"crn_policies": True})
+    res = run_sweep(spec)
+
     out = {}
     for n in ns:
-        tcfg = TraceConfig(horizon=240.0, compression=base_comp / n, seed=42)
-        trace = synth_azure_trace(tcfg)
         rows = []
-        for pol in ("gate_and_route", "sarathi", "vllm"):
-            s = run_trace_policy(pol, trace, n, horizon=tcfg.horizon)
+        for pol in DIRECT:
+            (c,) = res.select(policy=pol, n=n)
             rows.append({"policy": pol,
-                         "revenue_rate": round(s["revenue_rate"], 1),
-                         "completion": round(s["completion_rate"], 3),
-                         "ttft_mean": round(s["ttft_mean"], 2)})
-        s = best_fixed_split("mix_solo", trace, n,
-                             ks=[max(1, n // 5), n // 2], horizon=tcfg.horizon)
+                         "revenue_rate": round(c.metrics["revenue_rate"], 1),
+                         "completion": round(c.metrics["completion_rate"], 3),
+                         "ttft_mean": round(c.metrics["ttft_mean"], 2)})
+        # DistServe comparator: best of the scanned fixed splits
+        best = max((c for t in DISTSERVE for c in res.select(policy=t, n=n)),
+                   key=lambda c: c.metrics["revenue_rate"])
         rows.append({"policy": "distserve_mix_solo",
-                     "revenue_rate": round(s["revenue_rate"], 1),
-                     "completion": round(s["completion_rate"], 3),
-                     "ttft_mean": round(s["ttft_mean"], 2)})
+                     "revenue_rate": round(best.metrics["revenue_rate"], 1),
+                     "completion": round(best.metrics["completion_rate"], 3),
+                     "ttft_mean": round(best.metrics["ttft_mean"], 2)})
         rows.sort(key=lambda r: -r["revenue_rate"])
         out[f"n{n}"] = rows
         print(fmt_table(rows, ["policy", "revenue_rate", "completion",
@@ -40,6 +61,8 @@ def run(quick: bool = True) -> dict:
     out["ours_first_everywhere"] = all(
         v[0]["policy"] == "gate_and_route" for v in out.values()
         if isinstance(v, list))
+    artifact = res.save(ART.parent / "sweep" / "scale_sweep.json")
+    out["sweep_artifact"] = str(artifact)
     save("scale_sweep", out)
     return out
 

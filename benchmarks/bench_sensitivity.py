@@ -4,27 +4,41 @@ pricing-ratio invariance heatmap.
 All curves are planning-LP sweeps (the paper's own methodology for Fig. 7):
 revenue = optimal LP value, TPOT = Eq. (47) at the optimum.  Fig. 8b checks
 that argmax_{c_p+c_d=k} revenue keeps a constant c_p/c_d ratio across k.
+
+Every parameter point is one workload mix of an "lp"-evaluator sweep
+(:mod:`repro.sweep`); the LP is deterministic, so the sweep cells equal
+the former serial loop's solves exactly.
 """
 
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core.planning import solve_bundled_lp, tpot_of_plan
-from repro.core.types import Pricing, ServicePrimitives
+from repro.sweep import MixSpec, SweepSpec, run_sweep
+from repro.sweep.run import default_mix
 
-from .bench_sli_pareto import CLASSES
-from .common import save
+from .common import ART, save
+
+BASE_PRIM = dict(alpha=0.0174, beta=6.2e-5, gamma=1 / 0.0089, batch_cap=16,
+                 chunk=256)
+CLASS_DICTS = default_mix("two_class").classes
 
 
-def _solve(prim, pricing=Pricing(0.1, 0.2)):
-    plan = solve_bundled_lp(CLASSES, prim, pricing)
-    return float(plan.revenue_rate), float(tpot_of_plan(plan))
+def _lp_sweep(name: str, mixes) -> dict:
+    """Run an LP sweep; returns {mix name: metrics} preserving mix order."""
+    spec = SweepSpec(name=name, evaluator="lp", policies=("lp",),
+                     n_servers=(1,), n_seeds=1, seed=0, mixes=tuple(mixes))
+    res = run_sweep(spec)
+    res.save(ART.parent / "sweep" / f"{name}.json")
+    return {m.name: res.select(mix=m.name)[0].metrics for m in spec.mixes}
+
+
+def _mix(name: str, prim: dict, pricing: dict = None) -> MixSpec:
+    return MixSpec(name=name, classes=CLASS_DICTS, prim=prim,
+                   pricing=pricing or {})
 
 
 def run(quick: bool = True) -> dict:
-    base = dict(alpha=0.0174, beta=6.2e-5, gamma=1 / 0.0089, batch_cap=16,
-                chunk=256)
     out: dict = {}
 
     sweeps = {
@@ -34,40 +48,46 @@ def run(quick: bool = True) -> dict:
         "gamma": list(np.linspace(10, 50, 4 if quick else 8)),
     }
     for key, vals in sweeps.items():
-        rows = []
+        mixes = []
         for v in vals:
-            kw = dict(base)
+            kw = dict(BASE_PRIM)
             if key == "B":
                 kw["batch_cap"] = int(v)
             else:
                 kw[key] = float(v)
-            rev, tpot = _solve(ServicePrimitives(**kw))
-            rows.append({"value": float(v), "revenue": rev, "tpot": tpot})
+            mixes.append(_mix(f"{key}={float(v):.6g}", kw))
+        cells = _lp_sweep(f"sensitivity_{key}", mixes)
+        rows = [{"value": float(v), "revenue": m["revenue"],
+                 "tpot": m["tpot"]}
+                for v, m in zip(vals, cells.values())]
         out[key] = rows
         trend = "+" if rows[-1]["revenue"] >= rows[0]["revenue"] else "-"
         print(f"[sensitivity] {key}: revenue {rows[0]['revenue']:.1f} -> "
               f"{rows[-1]['revenue']:.1f} ({trend})")
 
     # revenue landscape over (B, beta) -- Fig 8a
-    grid = []
     Bs = [4, 8, 16, 32]
     betas = list(np.geomspace(1e-5, 5e-4, 4))
-    for Bv in Bs:
-        for bv in betas:
-            kw = dict(base, batch_cap=Bv, beta=bv)
-            rev, _ = _solve(ServicePrimitives(**kw))
-            grid.append({"B": Bv, "beta": bv, "revenue": rev})
+    mixes = [_mix(f"B={Bv}_beta={bv:.6g}",
+                  dict(BASE_PRIM, batch_cap=Bv, beta=bv))
+             for Bv in Bs for bv in betas]
+    cells = _lp_sweep("sensitivity_landscape", mixes)
+    grid = [{"B": Bv, "beta": bv, "revenue": m["revenue"]}
+            for (Bv, bv), m in zip(((B, b) for B in Bs for b in betas),
+                                   cells.values())]
     out["landscape"] = grid
 
     # pricing-ratio invariance -- Fig 8b
+    ks = [0.3, 0.6, 1.2] if quick else [0.15, 0.3, 0.6, 1.2, 2.4]
+    fs = list(np.linspace(0.05, 0.95, 19))
+    mixes = [_mix(f"k={k:g}_f={f:.4f}", dict(BASE_PRIM),
+                  pricing=dict(c_p=f * k, c_d=(1 - f) * k))
+             for k in ks for f in fs]
+    cells = _lp_sweep("sensitivity_pricing", mixes)
     ratios = []
-    for k in ([0.3, 0.6, 1.2] if quick else [0.15, 0.3, 0.6, 1.2, 2.4]):
-        best = None
-        for f in np.linspace(0.05, 0.95, 19):
-            rev, _ = _solve(ServicePrimitives(**base),
-                            Pricing(c_p=f * k, c_d=(1 - f) * k))
-            if best is None or rev > best[1]:
-                best = (f, rev)
+    for k in ks:
+        best = max(((f, cells[f"k={k:g}_f={f:.4f}"]["revenue"]) for f in fs),
+                   key=lambda t: t[1])
         ratios.append({"k": k, "cp_share": best[0],
                        "cp_over_cd": best[0] / (1 - best[0])})
     out["pricing_ratio"] = ratios

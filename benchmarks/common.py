@@ -3,20 +3,12 @@
 from __future__ import annotations
 
 import json
-import time
 from pathlib import Path
 
-import numpy as np
-
-from repro.core.online import OnlineController, OnlineControllerConfig
-from repro.core.planning import solve_bundled_lp
-from repro.core.policies import (PolicySpec, baseline_distserve,
-                                 baseline_sarathi, baseline_vllm,
-                                 gate_and_route)
-from repro.core.types import Pricing, ServicePrimitives, WorkloadClass
-from repro.data.traces import (Request, TraceConfig, synth_azure_trace,
-                               trace_class_means)
-from repro.serving.engine_sim import ClusterEngine, EngineConfig
+from repro.core.types import Pricing, ServicePrimitives
+from repro.sweep.evaluators import (evaluate_trace_policy,
+                                    planner_classes_from_trace)
+from repro.sweep.run import fmt_table  # noqa: F401 - shared table formatter
 
 ART = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
 
@@ -31,48 +23,24 @@ def save(name: str, payload: dict):
 
 
 def planner_classes(trace, n, n_classes=2, theta=3e-4):
-    means = trace_class_means(trace, n_classes)
-    return [
-        WorkloadClass(f"class{i}", prompt_len=means[i][0],
-                      decode_len=means[i][1],
-                      arrival_rate=max(means[i][2] / n, 1e-6),
-                      patience=theta)
-        for i in range(n_classes)
-    ]
+    return planner_classes_from_trace(trace, n, n_classes=n_classes,
+                                      theta=theta)
 
 
 def run_trace_policy(policy_name: str, trace, n: int, *, prim=PRIM,
                      pricing=PRICING, horizon=600.0, online=True,
                      seed=42, sli=None, distserve_k=None,
                      safety=3.0) -> dict:
-    """One (policy, trace) evaluation in the calibrated engine."""
-    n_classes = max(r.cls for r in trace) + 1
-    classes = planner_classes(trace, n, n_classes=n_classes)
-    plan = solve_bundled_lp(classes, prim, pricing, sli=sli)
-    controller = None
-    cfg = EngineConfig(prim, pricing, n, seed=seed)
-    if policy_name == "gate_and_route":
-        policy = gate_and_route(plan)
-        if online:
-            controller = OnlineController(
-                classes, prim, pricing, n=n,
-                config=OnlineControllerConfig(sli=sli, safety=safety))
-    elif policy_name == "sarathi":
-        policy = baseline_sarathi(plan)
-        cfg = EngineConfig(prim, pricing, n, seed=seed, sarathi_budget=True)
-    elif policy_name == "vllm":
-        # prefill-first scheduling; chunking stays a system property (C),
-        # exactly as in the paper's Section 2 model.
-        policy = baseline_vllm(plan)
-    elif policy_name == "distserve_mix_solo":
-        policy = baseline_distserve(plan, distserve_k, variant="mix_solo")
-    elif policy_name == "distserve_prefill_solo":
-        policy = baseline_distserve(plan, distserve_k, variant="prefill_solo")
-    else:
-        raise ValueError(policy_name)
-    eng = ClusterEngine(classes, policy, cfg, controller=controller)
-    m = eng.run(trace, horizon=horizon)
-    return m.summary()
+    """One (policy, trace) evaluation in the calibrated engine.
+
+    Thin wrapper over :func:`repro.sweep.evaluators.evaluate_trace_policy`,
+    which is also the sweep subsystem's "engine" cell evaluator."""
+    token = policy_name
+    if distserve_k is not None:
+        token = f"{policy_name}:k={int(distserve_k)}"
+    return evaluate_trace_policy(token, trace, n, prim=prim, pricing=pricing,
+                                 horizon=horizon, online=online, seed=seed,
+                                 sli=sli, safety=safety)
 
 
 def best_fixed_split(variant: str, trace, n: int, ks=None, **kw) -> dict:
@@ -85,15 +53,6 @@ def best_fixed_split(variant: str, trace, n: int, ks=None, **kw) -> dict:
         if best is None or s["revenue_rate"] > best["revenue_rate"]:
             best = dict(s, k=k)
     return best
-
-
-def fmt_table(rows: list[dict], cols: list[str], title: str) -> str:
-    w = {c: max(len(c), *(len(f"{r.get(c, '')}") for r in rows)) for c in cols}
-    out = [title, " | ".join(c.ljust(w[c]) for c in cols)]
-    out.append("-|-".join("-" * w[c] for c in cols))
-    for r in rows:
-        out.append(" | ".join(f"{r.get(c, '')}".ljust(w[c]) for c in cols))
-    return "\n".join(out)
 
 
 def round_vals(d: dict, nd=4) -> dict:

@@ -15,6 +15,24 @@ from . import (bench_ablations, bench_calibration, bench_charging,
                bench_classes, bench_convergence, bench_frontier,
                bench_matched, bench_roofline, bench_scale_sweep,
                bench_sensitivity, bench_sli_pareto, bench_trace_replay)
+from .common import ART
+
+
+class _SweepCLI:
+    """Suite adapter delegating to the ``python -m repro.sweep.run`` CLI."""
+
+    @staticmethod
+    def run(quick: bool = True):
+        from repro.sweep.run import main as sweep_main
+
+        argv = ["--name", "suite",
+                "--out", str(ART.parent / "sweep" / "suite.json")]
+        if quick:
+            argv.append("--quick")
+        rc = sweep_main(argv)
+        if rc:
+            raise RuntimeError(f"sweep CLI exited with {rc}")
+
 
 SUITE = [
     ("calibration", bench_calibration),        # Fig 3
@@ -28,6 +46,7 @@ SUITE = [
     ("classes", bench_classes),                # EC.8.4
     ("convergence", bench_convergence),        # EC.8.5
     ("ablations", bench_ablations),            # EC.8.6
+    ("sweep", _SweepCLI),                      # repro.sweep.run default grid
     ("roofline", bench_roofline),              # dry-run roofline table
 ]
 

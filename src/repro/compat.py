@@ -1,0 +1,46 @@
+"""Version-guarded shims over moving JAX APIs.
+
+The repo targets the modern surface (``jax.shard_map``,
+``jax.sharding.AxisType``) but must keep working on older CPU-only
+installs such as the test container's jax.  Import these names from here
+instead of from jax directly; each shim degrades to the closest older
+equivalent.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["AxisType", "shard_map", "make_mesh", "pcast"]
+
+try:  # jax >= 0.5-ish: explicit axis types on mesh axes
+    from jax.sharding import AxisType
+except ImportError:  # older jax: every mesh axis is implicitly "auto"
+    AxisType = None
+
+try:  # jax >= 0.8 public API
+    from jax import shard_map
+except ImportError:  # older jax: same callable under experimental
+    from jax.experimental.shard_map import shard_map
+
+
+if hasattr(jax.lax, "pcast"):
+    pcast = jax.lax.pcast
+else:
+    def pcast(x, axes, *, to):  # noqa: ARG001 - mirror the jax signature
+        # Older jax has no varying-manual-axes type system; replicated and
+        # varying values are indistinguishable, so the cast is a no-op.
+        return x
+
+
+def make_mesh(shape, axis_names, *, axis_types=None):
+    """``jax.make_mesh`` that tolerates installs without ``AxisType``.
+
+    ``axis_types=None`` means "Auto on every axis" where the concept
+    exists, and is simply dropped where it does not.
+    """
+    if AxisType is None:
+        return jax.make_mesh(shape, axis_names)
+    if axis_types is None:
+        axis_types = (AxisType.Auto,) * len(axis_names)
+    return jax.make_mesh(shape, axis_names, axis_types=axis_types)

@@ -5,11 +5,17 @@ family (instantaneous occupancy-tracking prefill gate + work-conserving
 solo-first or randomized decode router), and exposes the steady state for
 validation against the planning LP (Theorem 2 / Theorem 4 property tests)
 and against the CTMC simulator (Theorem 1).
+
+The integrator is split into :func:`fluid_params` (per-instance parameter
+pytree) and :func:`integrate_fluid_core` (a pure jittable scan over that
+pytree) so batch drivers can ``jax.vmap`` one compiled trajectory evaluator
+across a whole sweep grid (see :mod:`repro.sweep.fluid_batch`).
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
+from functools import partial
 from typing import Optional, Sequence
 
 import jax
@@ -19,7 +25,14 @@ import numpy as np
 from .planning import PlanSolution
 from .types import Pricing, ServicePrimitives, WorkloadClass, rate_arrays
 
-__all__ = ["FluidTrajectory", "integrate_fluid", "fluid_steady_state"]
+__all__ = [
+    "FluidTrajectory",
+    "fluid_params",
+    "integrate_fluid_core",
+    "fluid_final_state",
+    "integrate_fluid",
+    "fluid_steady_state",
+]
 
 
 @dataclass
@@ -42,12 +55,178 @@ class FluidTrajectory:
         }
 
 
-def _router_params(plan: PlanSolution, randomized: bool):
-    if randomized:
-        p_s = jnp.asarray(plan.solo_probs())
+def fluid_params(
+    classes: Sequence[WorkloadClass],
+    prim: ServicePrimitives,
+    pricing: Pricing,
+    plan: PlanSolution,
+    randomized_router: bool = False,
+) -> dict:
+    """Parameter pytree of the fluid ODE for one problem instance.
+
+    Every leaf is a jnp array, so instances with the same class count stack
+    along a leading axis for :func:`jax.vmap` (``p_s`` is all-ones when the
+    solo-first router is in force; the branch itself is selected by the
+    static ``randomized`` flag of :func:`integrate_fluid_core`).
+    """
+    arr = rate_arrays(classes, prim)
+    B = float(prim.batch_cap)
+    x_star = jnp.asarray(plan.x)
+    X_star = jnp.sum(x_star)  # static partition: fraction of mixed servers
+    p_s = (
+        jnp.asarray(plan.solo_probs())
+        if randomized_router
+        else jnp.ones_like(x_star)
+    )
+    return {
+        "lam": jnp.asarray(arr["lam"]),
+        "theta": jnp.asarray(arr["theta"]),
+        "mu_p": jnp.asarray(arr["mu_p"]),
+        "mu_m": jnp.asarray(arr["mu_m"]),
+        "mu_s": jnp.asarray(arr["mu_s"]),
+        "w": jnp.asarray([pricing.bundled_reward(c) for c in classes]),
+        "x_star": x_star,
+        "cap_m": (B - 1.0) * X_star,
+        "cap_s": B * (1.0 - X_star),
+        "p_s": p_s,
+    }
+
+
+def _proportional_fill(q, free):
+    """Move up to `free` total mass out of q, proportionally (FCFS-equiv)."""
+    tot = jnp.sum(q)
+    take = jnp.minimum(tot, free)
+    frac = jnp.where(tot > 0, take / jnp.maximum(tot, 1e-30), 0.0)
+    return q * frac
+
+
+def _fluid_step(params: dict, state: tuple, dt, randomized: bool) -> tuple:
+    """One Euler step of the policy fluid; returns the next state tuple."""
+    lam, theta = params["lam"], params["theta"]
+    mu_p, mu_m, mu_s = params["mu_p"], params["mu_m"], params["mu_s"]
+    x_star = params["x_star"]
+    cap_m, cap_s, p_s = params["cap_m"], params["cap_s"], params["p_s"]
+
+    qp, x, qdm, qds, ym, ys = state
+    # -- primitive flows over dt ------------------------------------------
+    a = lam * dt
+    bp = theta * qp * dt
+    sp = mu_p * x * dt
+    sdm = mu_m * ym * dt
+    sds = mu_s * ys * dt
+    bdm = theta * qdm * dt
+    bds = theta * qds * dt
+
+    qp = qp + a - bp
+    x = x - sp
+    ym = ym - sdm
+    ys = ys - sds
+    qdm = qdm - bdm
+    qds = qds - bds
+
+    # -- prefill gate: instantaneous pull-up to targets --------------------
+    admit = jnp.minimum(qp, jnp.maximum(x_star - x, 0.0))
+    x = x + admit
+    qp = qp - admit
+
+    # -- decode router ------------------------------------------------------
+    if not randomized:
+        # solo-first, single logical buffer (kept in the solo half)
+        inflow = sp
+        free_s = jnp.maximum(cap_s - jnp.sum(ys), 0.0)
+        to_s = _proportional_fill(inflow, free_s)
+        inflow = inflow - to_s
+        ys = ys + to_s
+        free_m = jnp.maximum(cap_m - jnp.sum(ym), 0.0)
+        to_m = _proportional_fill(inflow, free_m)
+        inflow = inflow - to_m
+        ym = ym + to_m
+        qds = qds + inflow
+        # work-conserving buffer drain (solo first)
+        free_s = jnp.maximum(cap_s - jnp.sum(ys), 0.0)
+        pull = _proportional_fill(qds + qdm, free_s)
+        frac = pull / jnp.maximum(qds + qdm, 1e-30)
+        ys = ys + pull
+        qds = qds - frac * qds
+        qdm = qdm - frac * qdm
+        free_m = jnp.maximum(cap_m - jnp.sum(ym), 0.0)
+        pull = _proportional_fill(qds + qdm, free_m)
+        frac = pull / jnp.maximum(qds + qdm, 1e-30)
+        ym = ym + pull
+        qds = qds - frac * qds
+        qdm = qdm - frac * qdm
     else:
-        p_s = None
-    return p_s
+        # randomized router with per-pool buffers (Section 5.2 / EC.7)
+        qds = qds + sp * p_s
+        qdm = qdm + sp * (1.0 - p_s)
+        free_s = jnp.maximum(cap_s - jnp.sum(ys), 0.0)
+        to_s = _proportional_fill(qds, free_s)
+        ys = ys + to_s
+        qds = qds - to_s
+        free_m = jnp.maximum(cap_m - jnp.sum(ym), 0.0)
+        to_m = _proportional_fill(qdm, free_m)
+        ym = ym + to_m
+        qdm = qdm - to_m
+
+    qp = jnp.maximum(qp, 0.0)
+    qdm = jnp.maximum(qdm, 0.0)
+    qds = jnp.maximum(qds, 0.0)
+    return (qp, x, qdm, qds, ym, ys)
+
+
+def _revenue_rate(params: dict, state: tuple):
+    """Instantaneous bundled reward rate of a fluid state (Eq. 21 flow)."""
+    _, _, _, _, ym, ys = state
+    return jnp.sum(params["w"] * (params["mu_m"] * ym
+                                  + params["mu_s"] * ys))
+
+
+@partial(jax.jit, static_argnames=("n_steps", "randomized"))
+def integrate_fluid_core(params: dict, state0: tuple, dt, *,
+                         n_steps: int, randomized: bool):
+    """Pure Euler scan of the policy fluid; vmappable over ``params``/``state0``.
+
+    ``state0`` is the tuple ``(qp, x, qdm, qds, ym, ys)`` of per-class
+    arrays; returns per-step stacked ``(qp, x, qd, ym, ys, revenue_rate)``.
+    For steady-state-only callers prefer :func:`fluid_final_state`, which
+    does not materialise the O(n_steps) trajectory.
+    """
+
+    def step(state, _):
+        new = _fluid_step(params, state, dt, randomized)
+        qp, x, qdm, qds, ym, ys = new
+        return new, (qp, x, qdm + qds, ym, ys,
+                     _revenue_rate(params, new))
+
+    _, out = jax.lax.scan(step, state0, None, length=n_steps)
+    return out
+
+
+@partial(jax.jit, static_argnames=("n_steps", "randomized"))
+def fluid_final_state(params: dict, state0: tuple, dt, *,
+                      n_steps: int, randomized: bool):
+    """Final fluid state + revenue rate only, O(1) memory in n_steps.
+
+    Same dynamics as :func:`integrate_fluid_core` but the scan carries no
+    per-step outputs -- the batched sweep evaluator vmaps this over whole
+    grids without holding (batch, n_steps, I) trajectories live.
+    """
+
+    def step(state, _):
+        return _fluid_step(params, state, dt, randomized), ()
+
+    final, _ = jax.lax.scan(step, state0, None, length=n_steps)
+    return final, _revenue_rate(params, final)
+
+
+def _initial_state(I: int, x0: Optional[dict]) -> tuple:
+    z = jnp.zeros(I)
+    if x0 is None:
+        return (z, z, z, z, z, z)
+    return tuple(
+        jnp.asarray(x0.get(k, np.zeros(I)), dtype=jnp.result_type(float))
+        for k in ("qp", "x", "qdm", "qds", "ym", "ys")
+    )
 
 
 def integrate_fluid(
@@ -62,109 +241,11 @@ def integrate_fluid(
     record_stride: int = 100,
 ) -> FluidTrajectory:
     """Euler-integrate the policy fluid; returns recorded trajectory."""
-    arr = rate_arrays(classes, prim)
-    I = len(classes)
-    B = float(prim.batch_cap)
-    lam = jnp.asarray(arr["lam"])
-    theta = jnp.asarray(arr["theta"])
-    mu_p = jnp.asarray(arr["mu_p"])
-    mu_m = jnp.asarray(arr["mu_m"])
-    mu_s = jnp.asarray(arr["mu_s"])
-    w = jnp.asarray([pricing.bundled_reward(c) for c in classes])
-
-    x_star = jnp.asarray(plan.x)
-    X_star = jnp.sum(x_star)  # static partition: fraction of mixed servers
-    cap_m = (B - 1.0) * X_star
-    cap_s = B * (1.0 - X_star)
-    p_s = _router_params(plan, randomized_router)
-
-    def proportional_fill(q, free):
-        """Move up to `free` total mass out of q, proportionally (FCFS-equiv)."""
-        tot = jnp.sum(q)
-        take = jnp.minimum(tot, free)
-        frac = jnp.where(tot > 0, take / jnp.maximum(tot, 1e-30), 0.0)
-        moved = q * frac
-        return moved
-
-    def step(state, _):
-        qp, x, qdm, qds, ym, ys = state
-        # -- primitive flows over dt ------------------------------------------
-        a = lam * dt
-        bp = theta * qp * dt
-        sp = mu_p * x * dt
-        sdm = mu_m * ym * dt
-        sds = mu_s * ys * dt
-        bdm = theta * qdm * dt
-        bds = theta * qds * dt
-
-        qp = qp + a - bp
-        x = x - sp
-        ym = ym - sdm
-        ys = ys - sds
-        qdm = qdm - bdm
-        qds = qds - bds
-
-        # -- prefill gate: instantaneous pull-up to targets --------------------
-        admit = jnp.minimum(qp, jnp.maximum(x_star - x, 0.0))
-        x = x + admit
-        qp = qp - admit
-
-        # -- decode router ------------------------------------------------------
-        if p_s is None:
-            # solo-first, single logical buffer (kept in the solo half)
-            inflow = sp
-            free_s = jnp.maximum(cap_s - jnp.sum(ys), 0.0)
-            to_s = proportional_fill(inflow, free_s)
-            inflow = inflow - to_s
-            ys = ys + to_s
-            free_m = jnp.maximum(cap_m - jnp.sum(ym), 0.0)
-            to_m = proportional_fill(inflow, free_m)
-            inflow = inflow - to_m
-            ym = ym + to_m
-            qds = qds + inflow
-            # work-conserving buffer drain (solo first)
-            free_s = jnp.maximum(cap_s - jnp.sum(ys), 0.0)
-            pull = proportional_fill(qds + qdm, free_s)
-            frac = pull / jnp.maximum(qds + qdm, 1e-30)
-            ys = ys + pull
-            qds = qds - frac * qds
-            qdm = qdm - frac * qdm
-            free_m = jnp.maximum(cap_m - jnp.sum(ym), 0.0)
-            pull = proportional_fill(qds + qdm, free_m)
-            frac = pull / jnp.maximum(qds + qdm, 1e-30)
-            ym = ym + pull
-            qds = qds - frac * qds
-            qdm = qdm - frac * qdm
-        else:
-            # randomized router with per-pool buffers (Section 5.2 / EC.7)
-            qds = qds + sp * p_s
-            qdm = qdm + sp * (1.0 - p_s)
-            free_s = jnp.maximum(cap_s - jnp.sum(ys), 0.0)
-            to_s = proportional_fill(qds, free_s)
-            ys = ys + to_s
-            qds = qds - to_s
-            free_m = jnp.maximum(cap_m - jnp.sum(ym), 0.0)
-            to_m = proportional_fill(qdm, free_m)
-            ym = ym + to_m
-            qdm = qdm - to_m
-
-        qp = jnp.maximum(qp, 0.0)
-        qdm = jnp.maximum(qdm, 0.0)
-        qds = jnp.maximum(qds, 0.0)
-        rev = jnp.sum(w * (mu_m * ym + mu_s * ys))
-        new = (qp, x, qdm, qds, ym, ys)
-        return new, (qp, x, qdm + qds, ym, ys, rev)
-
-    z = jnp.zeros(I)
-    if x0 is None:
-        state0 = (z, z, z, z, z, z)
-    else:
-        state0 = tuple(
-            jnp.asarray(x0.get(k, np.zeros(I)), dtype=jnp.result_type(float))
-            for k in ("qp", "x", "qdm", "qds", "ym", "ys")
-        )
+    params = fluid_params(classes, prim, pricing, plan, randomized_router)
+    state0 = _initial_state(len(classes), x0)
     n_steps = int(horizon / dt)
-    _, out = jax.lax.scan(step, state0, None, length=n_steps)
+    out = integrate_fluid_core(params, state0, dt, n_steps=n_steps,
+                               randomized=randomized_router)
     qp, x, qd, ym, ys, rev = (np.asarray(o) for o in out)
     idx = np.arange(0, n_steps, record_stride)
     return FluidTrajectory(

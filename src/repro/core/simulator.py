@@ -75,7 +75,14 @@ class _View:
 
 
 class CTMCSimulator:
-    """Event-driven exact simulation of the aggregate CTMC."""
+    """Event-driven exact simulation of the aggregate CTMC.
+
+    ``seed`` accepts an int, a :class:`numpy.random.SeedSequence`, or a
+    :class:`numpy.random.Generator`; sweep drivers pass spawned child
+    sequences so every grid cell gets a reproducible independent stream.
+    One simulator can serve many replications via :meth:`reset` /
+    :meth:`run_batch` without rebuilding the policy or rate arrays.
+    """
 
     def __init__(
         self,
@@ -92,7 +99,6 @@ class CTMCSimulator:
         self.pricing = pricing
         self.policy = policy
         self.n = int(n)
-        self.rng = np.random.default_rng(seed)
         self.arr = rate_arrays(self.classes, prim)
         self.I = len(self.classes)
         self.B = prim.batch_cap
@@ -112,6 +118,57 @@ class CTMCSimulator:
         self.w_dec = np.array([pricing.decode_reward(c) for c in self.classes])
 
         self.view = _View(self)
+        self.rng = np.random.default_rng(seed)
+        self.reset()
+
+    # -- replication management ------------------------------------------------
+    def snapshot(self) -> dict:
+        """Copy of the current Markov state (for warm-starting replications)."""
+        return {
+            "qp": self.Qp.copy(), "x": self.X.copy(),
+            "qdm": self.Qdm.copy(), "qds": self.Qds.copy(),
+            "ym": self.Ym.copy(), "ys": self.Ys.copy(),
+        }
+
+    def reset(self, rng: Optional[object] = None,
+              state: Optional[dict] = None) -> "CTMCSimulator":
+        """Re-zero (or warm-start) the state in place for a fresh replication.
+
+        ``rng`` accepts an int seed, a spawned
+        :class:`~numpy.random.SeedSequence`, or a ready-made
+        :class:`~numpy.random.Generator` stream -- so batch drivers can
+        hand each replication its own independent stream; ``None`` keeps
+        the current stream. ``state`` is a :meth:`snapshot` dict; omitting
+        it restarts empty. All per-class arrays are reused, not
+        reallocated.
+        """
+        if rng is not None:
+            self.rng = np.random.default_rng(rng)
+        for name, key in (("Qp", "qp"), ("X", "x"), ("Qdm", "qdm"),
+                          ("Qds", "qds"), ("Ym", "ym"), ("Ys", "ys")):
+            arr = getattr(self, name)
+            if state is not None:
+                arr[:] = state[key]
+            else:
+                arr[:] = 0.0
+        return self
+
+    def run_batch(self, horizon: float, warmup: float = 0.0, *,
+                  rngs: Sequence[object],
+                  warm_start: Optional[dict] = None) -> list[CTMCResult]:
+        """Run independent replications, one per RNG stream in ``rngs``.
+
+        The simulator object (policy, rate arrays, reward vectors) is reused
+        across replications; each entry of ``rngs`` seeds one replication via
+        :meth:`reset`.  With ``warm_start`` (a :meth:`snapshot`, e.g. the end
+        state of a pilot run) every replication starts from that state, which
+        lets callers amortise one warmup across the whole batch.
+        """
+        out = []
+        for r in rngs:
+            self.reset(rng=r, state=warm_start)
+            out.append(self.run(horizon, warmup=warmup))
+        return out
 
     # -- capacity ------------------------------------------------------------
     @property

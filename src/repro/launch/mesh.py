@@ -9,8 +9,7 @@ constants) so importing this module never touches jax device state.
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import AxisType
+from repro.compat import make_mesh
 
 __all__ = ["make_production_mesh", "v5e_constants"]
 
@@ -19,8 +18,7 @@ def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def v5e_constants() -> dict:

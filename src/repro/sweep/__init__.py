@@ -1,0 +1,29 @@
+"""Batched policy-sweep subsystem.
+
+Evaluates a (workload mix x policy x cluster size x seed) grid in one
+call -- the execution backbone of every benchmark in ``benchmarks/`` and
+the paper's convergence (EC.8.5) and scaling (EC.8.3) experiments.
+
+* :mod:`repro.sweep.spec` -- ``SweepSpec`` / ``SweepResult`` JSON schema,
+  per-cell ``SeedSequence`` streams.
+* :mod:`repro.sweep.evaluators` -- policy-token registry + the ctmc / lp /
+  engine cell evaluators.
+* :mod:`repro.sweep.fluid_batch` -- ``jax.vmap``-batched fluid-ODE grid.
+* :mod:`repro.sweep.runner` -- :func:`run_sweep` grid executor.
+* :mod:`repro.sweep.run` -- ``python -m repro.sweep.run`` CLI.
+"""
+
+from .spec import (CellResult, MixSpec, SweepResult, SweepSchemaError,
+                   SweepSpec, cell_seed_sequence, validate_payload)
+from .runner import run_sweep
+
+__all__ = [
+    "CellResult",
+    "MixSpec",
+    "SweepResult",
+    "SweepSchemaError",
+    "SweepSpec",
+    "cell_seed_sequence",
+    "validate_payload",
+    "run_sweep",
+]

@@ -1,0 +1,322 @@
+"""Cell evaluators + the policy-token registry for the sweep subsystem.
+
+A *policy token* is a string naming a policy constructor, optionally with
+``:key=value`` arguments, e.g.::
+
+    "gate_and_route"              Section 4 occupancy gate + solo-first router
+    "sli_aware"                   Section 5.2 randomized router (SLI plan)
+    "GG-SP" ... "FG-SP"           EC.8.6 component ablations
+    "vllm", "sarathi"             system baselines
+    "distserve_mix_solo:k=4"      DistServe fixed split, absolute k
+    "distserve_mix_solo:frac=0.2" fixed split, k = max(1, int(frac * n))
+
+Tokens are resolved against a per-mix :class:`MixContext`, which caches the
+planning-LP solves and (for the trace engine) the synthesized trace per
+cluster size, so the embarrassingly-parallel seed axis never repeats
+deterministic work.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.core.planning import SLISpec, solve_bundled_lp, solve_separate_lp
+from repro.core.policies import (PolicySpec, ablation_policy,
+                                 baseline_distserve, baseline_sarathi,
+                                 baseline_vllm, gate_and_route,
+                                 prioritize_and_route, sli_aware_policy)
+from repro.core.simulator import CTMCSimulator
+from repro.core.types import Pricing, ServicePrimitives, WorkloadClass
+
+from .spec import MixSpec, SweepSpec, cell_int_seed
+
+__all__ = [
+    "ABLATION_TOKENS",
+    "MixContext",
+    "parse_policy_token",
+    "resolve_policy",
+    "evaluate_ctmc_cells",
+    "evaluate_lp_cell",
+    "evaluate_trace_policy",
+    "evaluate_engine_cell",
+]
+
+ABLATION_TOKENS = ("GG-SP", "FI-WSP", "GI-WSP", "GF-WSP", "FG-SP")
+
+
+def parse_policy_token(token: str) -> tuple:
+    """Split ``"name:k=v,k=v"`` into ``(name, {k: number})``."""
+    name, _, argstr = token.partition(":")
+    args = {}
+    if argstr:
+        for part in argstr.split(","):
+            k, _, v = part.partition("=")
+            if not v:
+                raise ValueError(f"malformed policy token {token!r}")
+            args[k.strip()] = float(v)
+    return name.strip(), args
+
+
+class MixContext:
+    """Per-mix caches shared across the policy/n/seed axes of one sweep."""
+
+    def __init__(self, mix: MixSpec, spec: SweepSpec):
+        self.mix = mix
+        self.spec = spec
+        self.classes = mix.workload_classes()
+        self.prim = mix.primitives()
+        self.pricing = mix.price()
+        self._plans: dict = {}
+        self._traces: dict = {}
+        self._trace_classes: dict = {}
+
+    # -- planning --------------------------------------------------------------
+    def plan(self, kind: str = "base"):
+        """LP solutions, cached: "base" (bundled), "sli" (pinned q_d = 0,
+        the Section 5.2 router's standing assumption), "separate"."""
+        if kind not in self._plans:
+            if kind == "base":
+                p = solve_bundled_lp(self.classes, self.prim, self.pricing)
+            elif kind == "sli":
+                p = solve_bundled_lp(
+                    self.classes, self.prim, self.pricing,
+                    sli=SLISpec(pin_zero_decode_queue=True))
+            elif kind == "separate":
+                p = solve_separate_lp(self.classes, self.prim, self.pricing)
+            else:
+                raise ValueError(kind)
+            self._plans[kind] = p
+        return self._plans[kind]
+
+    # -- trace engine ----------------------------------------------------------
+    def trace(self, n: int):
+        """Synthesized trace for cluster size n (cached across policies/seeds).
+
+        ``compression_per_server`` in the mix's trace overrides resolves to
+        ``compression = value / n`` so per-server offered load stays fixed
+        while the cluster grows (the EC.8.3 protocol)."""
+        if n not in self._traces:
+            from repro.data.traces import TraceConfig, synth_azure_trace
+
+            kw = dict(self.mix.trace)
+            cps = kw.pop("compression_per_server", None)
+            if cps is not None:
+                kw["compression"] = float(cps) / n
+            self._traces[n] = synth_azure_trace(TraceConfig(**kw))
+        return self._traces[n]
+
+    def trace_classes(self, n: int):
+        if n not in self._trace_classes:
+            self._trace_classes[n] = planner_classes_from_trace(
+                self.trace(n), n,
+                theta=float(self.spec.extra.get("planner_theta", 3e-4)))
+        return self._trace_classes[n]
+
+    def trace_plan(self, n: int):
+        """Planning LP over the trace-derived classes, cached per n so the
+        policy and seed axes never repeat the (deterministic) solve."""
+        key = ("trace_plan", n)
+        if key not in self._plans:
+            self._plans[key] = solve_bundled_lp(
+                self.trace_classes(n), self.prim, self.pricing)
+        return self._plans[key]
+
+
+def planner_classes_from_trace(trace, n: int, n_classes: Optional[int] = None,
+                               theta: float = 3e-4):
+    """Planner inputs from a trace's empirical per-class means."""
+    from repro.data.traces import trace_class_means
+
+    if n_classes is None:
+        n_classes = max(r.cls for r in trace) + 1
+    means = trace_class_means(trace, n_classes)
+    return [
+        WorkloadClass(f"class{i}", prompt_len=means[i][0],
+                      decode_len=means[i][1],
+                      arrival_rate=max(means[i][2] / n, 1e-6),
+                      patience=theta)
+        for i in range(n_classes)
+    ]
+
+
+def resolve_policy(token: str, ctx: MixContext, n: int) -> PolicySpec:
+    """Instantiate a policy token for cluster size ``n``."""
+    name, args = parse_policy_token(token)
+    if name == "gate_and_route":
+        return gate_and_route(ctx.plan("base"))
+    if name == "prioritize_and_route":
+        return prioritize_and_route(ctx.plan("separate"))
+    if name == "sli_aware":
+        return sli_aware_policy(ctx.plan("sli"))
+    if name == "sli_aware_general":
+        return sli_aware_policy(ctx.plan("sli"), general=True)
+    if name in ABLATION_TOKENS:
+        return ablation_policy(ctx.plan("base"), name)
+    if name == "vllm":
+        return baseline_vllm(ctx.plan("base"))
+    if name == "sarathi":
+        return baseline_sarathi(ctx.plan("base"))
+    if name in ("distserve_mix_solo", "distserve_prefill_solo"):
+        variant = name[len("distserve_"):]
+        k = _distserve_k(args, n)
+        return baseline_distserve(ctx.plan("base"), k, variant=variant)
+    raise ValueError(f"unknown policy token {token!r}")
+
+
+def _distserve_k(args: dict, n: int) -> int:
+    if "k" in args:
+        return int(args["k"])
+    if "frac" in args:
+        return max(1, int(args["frac"] * n))
+    raise ValueError("distserve token needs k= or frac=")
+
+
+# ---------------------------------------------------------------------------
+# CTMC evaluator (aggregate exact simulation; Section 2.3 / EC.8.5)
+# ---------------------------------------------------------------------------
+
+
+def _ctmc_metrics(res, plan) -> dict:
+    m = {
+        "revenue_rate": float(res.revenue_rate_per_server),
+        "R_star": float(plan.revenue_rate),
+        "completions": float(res.completions.sum()),
+        "arrivals": float(res.arrivals.sum()),
+        "abandons_p": float(res.abandons_p.sum()),
+        "abandons_d": float(res.abandons_d.sum()),
+    }
+    if plan.revenue_rate > 0:
+        m["gap_pct"] = 100.0 * (1.0 - m["revenue_rate"] / m["R_star"])
+    avg_y = res.avg_ym + res.avg_ys
+    y_star = plan.ym + plan.ys
+    for i in range(len(plan.x)):
+        m[f"avg_x/{i}"] = float(res.avg_x[i])
+        m[f"avg_y/{i}"] = float(avg_y[i])
+        m[f"avg_qp/{i}"] = float(res.avg_qp[i])
+        m[f"avg_qd/{i}"] = float(res.avg_qd[i])
+        m[f"x_star/{i}"] = float(plan.x[i])
+        m[f"y_star/{i}"] = float(y_star[i])
+    m["x_err_l1"] = float(np.abs(res.avg_x - plan.x).sum())
+    m["y_err_l1"] = float(np.abs(avg_y - y_star).sum())
+    return m
+
+
+def evaluate_ctmc_cells(ctx: MixContext, token: str, n: int,
+                        streams: Sequence[np.random.SeedSequence]) -> list:
+    """All seed replications of one (mix, policy, n) cell.
+
+    One simulator instance serves the whole replication batch
+    (:meth:`CTMCSimulator.run_batch`); each replication gets its own
+    spawned stream, so any single cell is exactly reproducible by a direct
+    ``CTMCSimulator(..., seed=cell_seed_sequence(...)).run(...)`` call.
+    """
+    policy = resolve_policy(token, ctx, n)
+    spec = ctx.spec
+    sim = CTMCSimulator(ctx.classes, ctx.prim, ctx.pricing, policy, n=n,
+                        seed=streams[0], record_every=spec.record_every)
+    results = sim.run_batch(spec.horizon, warmup=spec.warmup, rngs=streams)
+    # judge each policy against its own planning targets (the SLI-aware
+    # router plans with q_d pinned to zero, so its x*/y*/R* differ)
+    plan = policy.plan if policy.plan is not None else ctx.plan("base")
+    return [_ctmc_metrics(r, plan) for r in results]
+
+
+# ---------------------------------------------------------------------------
+# Planning-LP evaluator (deterministic; Figs. 7-8 style sweeps)
+# ---------------------------------------------------------------------------
+
+
+def evaluate_lp_cell(ctx: MixContext, token: str) -> dict:
+    """Optimal-plan metrics for one mix (policy axis picks the objective)."""
+    from repro.core.planning import tpot_of_plan
+
+    name, _ = parse_policy_token(token)
+    kind = {"lp": "base", "lp_bundled": "base",
+            "lp_separate": "separate", "lp_sli": "sli"}.get(name)
+    if kind is None:
+        raise ValueError(f"lp evaluator got non-lp policy token {token!r}")
+    plan = ctx.plan(kind)
+    m = {
+        "revenue": float(plan.revenue_rate),
+        "tpot": float(tpot_of_plan(plan)),
+        "x_total": float(plan.x_total),
+    }
+    for i in range(len(plan.x)):
+        m[f"x_star/{i}"] = float(plan.x[i])
+        m[f"y_star/{i}"] = float(plan.ym[i] + plan.ys[i])
+        m[f"qp_star/{i}"] = float(plan.qp[i])
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Per-server trace engine evaluator (Section 6.2 calibrated simulator)
+# ---------------------------------------------------------------------------
+
+
+def evaluate_trace_policy(token: str, trace, n: int, *,
+                          prim: Optional[ServicePrimitives] = None,
+                          pricing: Optional[Pricing] = None,
+                          horizon: float = 600.0, online: bool = True,
+                          seed: int = 42, sli: Optional[SLISpec] = None,
+                          safety: float = 3.0,
+                          classes=None, plan=None) -> dict:
+    """One (policy, trace) evaluation in the calibrated per-server engine.
+
+    This is the single implementation behind both the sweep's "engine"
+    evaluator and :func:`benchmarks.common.run_trace_policy`.  Pass a
+    pre-solved ``plan`` (with matching ``classes``) to skip the LP solve;
+    the sweep runner does this via :meth:`MixContext.trace_plan`.
+    """
+    from repro.core.online import OnlineController, OnlineControllerConfig
+    from repro.serving.engine_sim import ClusterEngine, EngineConfig
+
+    prim = prim or ServicePrimitives()
+    pricing = pricing or Pricing()
+    if classes is None:
+        classes = planner_classes_from_trace(trace, n)
+    if plan is None:
+        plan = solve_bundled_lp(classes, prim, pricing, sli=sli)
+    name, args = parse_policy_token(token)
+    controller = None
+    cfg = EngineConfig(prim, pricing, n, seed=seed)
+    if name == "gate_and_route":
+        policy = gate_and_route(plan)
+        if online:
+            controller = OnlineController(
+                classes, prim, pricing, n=n,
+                config=OnlineControllerConfig(sli=sli, safety=safety))
+    elif name == "sarathi":
+        policy = baseline_sarathi(plan)
+        cfg = EngineConfig(prim, pricing, n, seed=seed, sarathi_budget=True)
+    elif name == "vllm":
+        # prefill-first scheduling; chunking stays a system property (C),
+        # exactly as in the paper's Section 2 model.
+        policy = baseline_vllm(plan)
+    elif name in ("distserve_mix_solo", "distserve_prefill_solo"):
+        policy = baseline_distserve(plan, _distserve_k(args, n),
+                                    variant=name[len("distserve_"):])
+    else:
+        raise ValueError(f"engine evaluator got unknown policy {token!r}")
+    eng = ClusterEngine(classes, policy, cfg, controller=controller)
+    m = eng.run(trace, horizon=horizon)
+    out = m.summary()
+    if name.startswith("distserve_"):
+        out["distserve_k"] = _distserve_k(args, n)
+    return {k: float(v) for k, v in out.items()}
+
+
+def evaluate_engine_cell(ctx: MixContext, token: str, n: int,
+                         ss: np.random.SeedSequence) -> dict:
+    spec = ctx.spec
+    return evaluate_trace_policy(
+        token, ctx.trace(n), n,
+        prim=ctx.prim, pricing=ctx.pricing,
+        horizon=spec.horizon,
+        online=bool(spec.extra.get("online", True)),
+        seed=cell_int_seed(ss),
+        safety=float(spec.extra.get("safety", 3.0)),
+        classes=ctx.trace_classes(n),
+        plan=ctx.trace_plan(n),
+    )

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import pcast, shard_map
+
 __all__ = ["bubble_fraction", "make_pipeline_forward"]
 
 
@@ -50,8 +52,8 @@ def make_pipeline_forward(stage_fn, mesh, *, n_micro: int, axis: str = "pipe"):
         buf = jnp.zeros_like(x0)  # inter-stage register
         outs = jnp.zeros((n_micro,) + x0.shape, x0.dtype)
         # carries become device-varying inside the loop; mark them so
-        buf = jax.lax.pcast(buf, (axis,), to="varying")
-        outs = jax.lax.pcast(outs, (axis,), to="varying")
+        buf = pcast(buf, (axis,), to="varying")
+        outs = pcast(outs, (axis,), to="varying")
 
         def tick(carry, t):
             buf, outs = carry
@@ -77,8 +79,6 @@ def make_pipeline_forward(stage_fn, mesh, *, n_micro: int, axis: str = "pipe"):
         # them to every stage (and restores the replicated type for vma)
         outs = jnp.where(sid == S - 1, outs, jnp.zeros_like(outs))
         return jax.lax.psum(outs, axis)
-
-    from jax import shard_map  # jax >= 0.8
 
     return shard_map(
         per_stage, mesh=mesh,

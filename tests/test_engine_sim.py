@@ -2,6 +2,7 @@
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need hypothesis; skip where absent
 from hypothesis import given, settings, strategies as st
 
 from repro.core.online import OnlineController, OnlineControllerConfig

@@ -4,6 +4,7 @@ import itertools
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need hypothesis; skip where absent
 from hypothesis import given, settings, strategies as st
 
 from repro.core.lp import LPInfeasible, LPUnbounded, linprog_max

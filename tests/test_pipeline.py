@@ -9,10 +9,10 @@ SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import jax, jax.numpy as jnp, numpy as np
-from jax.sharding import AxisType
+from repro.compat import make_mesh
 from repro.training.pipeline import make_pipeline_forward
 
-mesh = jax.make_mesh((4,), ("pipe",), axis_types=(AxisType.Auto,))
+mesh = make_mesh((4,), ("pipe",))
 S, n_micro, d = 4, 6, 8
 
 # stage s applies y = x @ W_s (W stacked over stages)

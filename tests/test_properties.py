@@ -1,6 +1,9 @@
 """Hypothesis property tests on the system's invariants."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need hypothesis; skip where absent
 from hypothesis import given, settings, strategies as st
 
 from repro.core.lp import linprog_max

@@ -1,0 +1,180 @@
+"""Sweep subsystem tests: determinism, schema round-trip, and exact
+equivalence of a batched sweep cell against a direct CTMCSimulator run."""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.simulator import CTMCSimulator
+from repro.sweep import (MixSpec, SweepResult, SweepSchemaError, SweepSpec,
+                         cell_seed_sequence, run_sweep, validate_payload)
+from repro.sweep.evaluators import (MixContext, parse_policy_token,
+                                    resolve_policy)
+from repro.sweep.run import default_mix
+
+
+def small_spec(**kw) -> SweepSpec:
+    base = dict(name="t", evaluator="ctmc",
+                policies=("gate_and_route", "FG-SP"),
+                n_servers=(10, 20), n_seeds=2, seed=123,
+                mixes=(default_mix("two_class"),),
+                horizon=10.0, warmup=2.0)
+    base.update(kw)
+    return SweepSpec(**base)
+
+
+@pytest.fixture(scope="module")
+def result() -> SweepResult:
+    return run_sweep(small_spec())
+
+
+def test_grid_is_complete(result):
+    spec = result.spec
+    assert len(result.cells) == spec.n_cells
+    for pol in spec.policies:
+        for n in spec.n_servers:
+            assert len(result.select(policy=pol, n=n)) == spec.n_seeds
+
+
+def test_determinism_same_spec_same_fingerprint(result):
+    again = run_sweep(small_spec())
+    assert again.fingerprint() == result.fingerprint()
+    # ...and a different master seed perturbs the cells
+    other = run_sweep(small_spec(seed=124))
+    assert other.fingerprint() != result.fingerprint()
+
+
+def test_seed_streams_are_coordinate_keyed():
+    spec = small_spec()
+    a = cell_seed_sequence(spec, 0, 1, 1, 0)
+    b = cell_seed_sequence(spec, 0, 1, 1, 0)
+    c = cell_seed_sequence(spec, 0, 1, 1, 1)
+    assert a.entropy == b.entropy
+    assert np.random.default_rng(a).random() == np.random.default_rng(b).random()
+    assert np.random.default_rng(a).random() != np.random.default_rng(c).random()
+
+
+def test_batched_cell_equals_direct_ctmc_run(result):
+    """A sweep cell must be bitwise-reproducible by a standalone
+    CTMCSimulator run seeded with the cell's SeedSequence."""
+    spec = result.spec
+    mix_i, policy_i, n_i, seed_i = 0, 0, 1, 1
+    token, n = spec.policies[policy_i], spec.n_servers[n_i]
+    ctx = MixContext(spec.mixes[mix_i], spec)
+    policy = resolve_policy(token, ctx, n)
+    ss = cell_seed_sequence(spec, mix_i, policy_i, n_i, seed_i)
+    direct = CTMCSimulator(ctx.classes, ctx.prim, ctx.pricing, policy,
+                           n=n, seed=ss).run(spec.horizon, warmup=spec.warmup)
+    (cell,) = result.select(policy=token, n=n, seed=seed_i)
+    assert cell.metrics["revenue_rate"] == direct.revenue_rate_per_server
+    assert cell.metrics["completions"] == direct.completions.sum()
+    for i in range(len(ctx.classes)):
+        assert cell.metrics[f"avg_x/{i}"] == direct.avg_x[i]
+
+
+def test_json_round_trip(tmp_path, result):
+    path = result.save(tmp_path / "sweep.json")
+    loaded = SweepResult.load(path)
+    assert loaded.spec == result.spec
+    assert loaded.fingerprint() == result.fingerprint()
+    validate_payload(json.loads(path.read_text()))
+
+
+def test_schema_validation_rejects_corruption(result):
+    payload = result.to_payload()
+    for mutate in (
+        lambda p: p.pop("schema_version"),
+        lambda p: p["cells"][0].pop("metrics"),
+        lambda p: p["cells"][0]["metrics"].update(bad="not-a-number"),
+        lambda p: p["cells"][0].update(policy="never-declared"),
+        lambda p: p["spec"].update(evaluator="teleport"),
+    ):
+        bad = json.loads(json.dumps(payload))
+        mutate(bad)
+        with pytest.raises(SweepSchemaError):
+            validate_payload(bad)
+
+
+def test_non_finite_metrics_serialize_as_null(tmp_path, result):
+    from repro.sweep import CellResult
+
+    res = SweepResult(spec=result.spec, cells=[
+        CellResult("two_class", "gate_and_route", 10, 0,
+                   {"revenue_rate": 1.0, "ttft_mean": float("nan")})])
+    path = res.save(tmp_path / "nan.json")
+    raw = path.read_text()
+    assert "NaN" not in raw and '"ttft_mean": null' in raw
+    loaded = SweepResult.load(path)
+    assert np.isnan(loaded.cells[0].metrics["ttft_mean"])
+
+
+def test_crn_policies_pairs_streams_across_policy_axis():
+    paired = run_sweep(small_spec(extra={"crn_policies": True},
+                                  policies=("FG-SP", "FG-SP")))
+    a = paired.metric("revenue_rate", policy="FG-SP", n=10)
+    # both policy columns are the same token under identical streams
+    assert a.size == 4 and np.array_equal(a[:2], a[2:])
+
+
+def test_policy_tokens():
+    assert parse_policy_token("distserve_mix_solo:frac=0.2") == (
+        "distserve_mix_solo", {"frac": 0.2})
+    spec = small_spec()
+    ctx = MixContext(spec.mixes[0], spec)
+    pol = resolve_policy("distserve_mix_solo:frac=0.2", ctx, 20)
+    assert pol.partition == "fixed:4"
+    pol = resolve_policy("distserve_mix_solo:k=3", ctx, 20)
+    assert pol.partition == "fixed:3"
+    with pytest.raises(ValueError):
+        resolve_policy("no_such_policy", ctx, 20)
+
+
+def test_run_batch_reuses_simulator_state():
+    spec = small_spec()
+    ctx = MixContext(spec.mixes[0], spec)
+    policy = resolve_policy("gate_and_route", ctx, 10)
+    sim = CTMCSimulator(ctx.classes, ctx.prim, ctx.pricing, policy, n=10,
+                        seed=0)
+    ss = np.random.SeedSequence(5)
+    a, b = sim.run_batch(5.0, rngs=ss.spawn(2))
+    c, d = sim.run_batch(5.0, rngs=np.random.SeedSequence(5).spawn(2))
+    assert a.revenue == c.revenue and b.revenue == d.revenue
+    # distinct streams genuinely differ
+    assert a.revenue != b.revenue
+
+
+def test_fluid_batch_matches_single_integration():
+    from repro.core.fluid import integrate_fluid
+    from repro.sweep.fluid_batch import evaluate_fluid_grid
+
+    spec = small_spec(evaluator="fluid", policies=("gate_and_route",),
+                      horizon=50.0)
+    ctx = MixContext(spec.mixes[0], spec)
+    grid = evaluate_fluid_grid([ctx], ["gate_and_route"], 50.0, 2e-3)
+    single = integrate_fluid(ctx.classes, ctx.prim, ctx.pricing,
+                             ctx.plan("base"), horizon=50.0, dt=2e-3)
+    m = grid[(0, 0)]
+    # float32 scan: vmapped and serial accumulation orders differ slightly
+    np.testing.assert_allclose(m["revenue_rate"], single.revenue_rate[-1],
+                               rtol=1e-4)
+    for i in range(len(ctx.classes)):
+        np.testing.assert_allclose(m[f"avg_x/{i}"], single.x[-1, i],
+                                   rtol=1e-4, atol=1e-6)
+
+
+def test_lp_sweep_is_deterministic_and_replicated():
+    spec = small_spec(evaluator="lp", policies=("lp",), n_servers=(1,),
+                      n_seeds=3)
+    res = run_sweep(spec)
+    revs = res.metric("revenue", policy="lp", n=1)
+    assert revs.size == 3 and np.all(revs == revs[0])
+
+
+def test_cli_smoke(tmp_path):
+    from repro.sweep.run import main
+
+    out = tmp_path / "smoke.json"
+    assert main(["--smoke", "--out", str(out)]) == 0
+    loaded = SweepResult.load(out)
+    assert loaded.cells and "revenue_rate" in loaded.cells[0].metrics

@@ -77,7 +77,7 @@ def test_compressed_psum_preserves_mean_with_feedback():
     # single-device shard_map over a size-1 axis still exercises the path
     mesh = jax.make_mesh((1,), ("data",))
     f = make_compressed_psum(mesh, "data")
-    from jax import shard_map
+    from repro.compat import shard_map
     from jax.sharding import PartitionSpec as P
     g = {"w": jnp.asarray(np.random.default_rng(1).normal(size=(32,))
                           .astype(np.float32))}

@@ -1,0 +1,74 @@
+#!/usr/bin/env python3
+"""Docs health check: every internal markdown link must resolve.
+
+Scans the repo's markdown docs for inline links/images and verifies that
+relative targets exist on disk (external http(s)/mailto links are
+skipped; pure #fragment links are checked against the current file's
+headings). Exits nonzero with a listing of broken links. Run from the
+repo root; CI runs this next to the tier-1 suite.
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+DOCS = ("README.md", "docs/ARCHITECTURE.md", "benchmarks/README.md",
+        "ROADMAP.md", "CHANGES.md")
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def heading_anchors(md: str) -> set:
+    anchors = set()
+    in_fence = False
+    for line in md.splitlines():
+        if line.lstrip().startswith("```"):
+            in_fence = not in_fence
+            continue
+        if in_fence:  # '# comment' inside a code block is not a heading
+            continue
+        if line.startswith("#"):
+            text = line.lstrip("#").strip().lower()
+            text = re.sub(r"[^\w\- ]", "", text).replace(" ", "-")
+            anchors.add(text)
+    return anchors
+
+
+def check(root: Path) -> list:
+    errors = []
+    for rel in DOCS:
+        doc = root / rel
+        if not doc.exists():
+            continue
+        md = doc.read_text()
+        anchors = heading_anchors(md)
+        for m in LINK_RE.finditer(md):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path, _, frag = target.partition("#")
+            if not path:  # same-file fragment
+                if frag and frag.lower() not in anchors:
+                    errors.append(f"{rel}: broken anchor #{frag}")
+                continue
+            resolved = (doc.parent / path).resolve()
+            if not resolved.exists():
+                errors.append(f"{rel}: broken link {target}")
+    return errors
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parents[1]
+    errors = check(root)
+    for e in errors:
+        print(f"[check_docs] {e}", file=sys.stderr)
+    if errors:
+        return 1
+    print(f"[check_docs] OK ({len(DOCS)} docs scanned)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
