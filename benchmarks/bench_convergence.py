@@ -11,7 +11,14 @@ SLI-aware randomized router.  Checks:
   gate-and-route (the paper's Fig. EC.6 observation).
 
 Grid execution is delegated to :mod:`repro.sweep`; this module only
-aggregates the sweep cells into the paper's table.
+aggregates the sweep cells into the paper's table.  ``evaluator`` picks
+the engine: ``"ctmc"`` (the exact Python loop) or ``"ctmc_jax"`` (the
+uniformized JAX engine -- same law, vmapped over the seed axis; use it
+for the paper-scale ``--full`` grid, where thousands of replications at
+n up to 500 dominate wall-clock).  From the CLI::
+
+    PYTHONPATH=src python -m benchmarks.bench_convergence \
+        --evaluator ctmc_jax [--full]
 """
 
 from __future__ import annotations
@@ -26,12 +33,14 @@ from .common import ART, fmt_table, save
 POLICIES = ("gate_and_route", "sli_aware")
 
 
-def run(quick: bool = True) -> dict:
+def run(quick: bool = True, evaluator: str = "ctmc") -> dict:
     ns = (20, 50, 200) if quick else (5, 20, 50, 200, 500)
     n_seeds = 2 if quick else 5
     horizon, warmup = (300.0, 75.0) if quick else (600.0, 150.0)
+    bench_name = ("convergence" if evaluator == "ctmc"
+                  else f"convergence_{evaluator}")
     spec = SweepSpec(
-        name="convergence", evaluator="ctmc", policies=POLICIES,
+        name=bench_name, evaluator=evaluator, policies=POLICIES,
         n_servers=ns, n_seeds=n_seeds, seed=0,
         mixes=(default_mix("two_class"),),
         horizon=horizon, warmup=warmup,
@@ -68,13 +77,20 @@ def run(quick: bool = True) -> dict:
                            "gap_pct", "x_err_l1", "y_err_l1"],
                     "\n[convergence] per-server revenue & occupancy vs n"))
     gr = [r for r in rows if r["policy"] == "gate_and_route"]
-    artifact = res.save(ART.parent / "sweep" / "convergence.json")
+    artifact = res.save(ART.parent / "sweep" / f"{bench_name}.json")
     out = {"rows": rows,
            "gap_shrinks": abs(gr[-1]["gap_pct"]) <= abs(gr[0]["gap_pct"]),
            "sweep_artifact": str(artifact)}
-    save("convergence", out)
+    save(bench_name, out)
     return out
 
 
 if __name__ == "__main__":
-    run(quick=True)
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--evaluator", default="ctmc",
+                    choices=("ctmc", "ctmc_jax"))
+    ap.add_argument("--full", action="store_true")
+    a = ap.parse_args()
+    run(quick=not a.full, evaluator=a.evaluator)

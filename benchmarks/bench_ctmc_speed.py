@@ -1,0 +1,105 @@
+"""Micro-benchmark: events/sec of the uniformized JAX CTMC vs the Python loop.
+
+Runs the same 64-replication batch (two-class EC.8.5 instance, n = 50,
+gate-and-route) through :class:`repro.core.simulator.CTMCSimulator` and
+:class:`repro.core.ctmc_jax.UniformizedCTMC` and reports simulated CTMC
+transitions per wall-second for each.  The JAX engine is timed twice --
+once cold (including jit compilation) and once warm -- and the headline
+``speedup`` uses the warm number, which is the steady-state throughput a
+sweep sees after its first cell.  Also cross-checks that the two engines
+agree on mean revenue rate (same law), so the speedup is apples to
+apples.
+
+Artifact: ``artifacts/bench/ctmc_speed.json`` with per-engine events/sec,
+the warm/cold walls, the self-loop-free step budget, and the agreement
+gap.  Acceptance bar for the repo: ``speedup >= 10`` at the
+64-replication batch.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.ctmc_jax import UniformizedCTMC
+from repro.core.planning import solve_bundled_lp
+from repro.core.policies import gate_and_route
+from repro.core.simulator import CTMCSimulator
+from repro.sweep.run import default_mix
+
+from .common import fmt_table, save
+
+REPS = 64
+
+
+def run(quick: bool = True) -> dict:
+    import jax
+
+    n = 50
+    horizon, warmup = (30.0, 8.0) if quick else (90.0, 30.0)
+    mix = default_mix("two_class")
+    classes, prim, pricing = (mix.workload_classes(), mix.primitives(),
+                              mix.price())
+    policy = gate_and_route(solve_bundled_lp(classes, prim, pricing))
+
+    # -- Python event loop (one simulator, one stream per replication) ----
+    sim = CTMCSimulator(classes, prim, pricing, policy, n=n)
+    streams = np.random.SeedSequence(0).spawn(REPS)
+    t0 = time.perf_counter()
+    res_py = sim.run_batch(horizon, warmup=warmup, rngs=streams)
+    wall_py = time.perf_counter() - t0
+    ev_py = float(sum(r.n_events for r in res_py))
+
+    # -- uniformized JAX engine (one vmapped scan over the batch) ---------
+    jsim = UniformizedCTMC(classes, prim, pricing, policy, n=n,
+                           horizon=horizon, warmup=warmup)
+    seeds = list(range(REPS))
+    t0 = time.perf_counter()
+    jax.block_until_ready(jsim.run_batch_raw(seeds))
+    wall_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    raw = jsim.run_batch_raw([s + REPS for s in seeds])
+    jax.block_until_ready(raw)
+    wall_jx = time.perf_counter() - t0
+    res_jx = jsim.results_from_raw(raw)
+    ev_jx = float(np.asarray(raw["n_events"]).sum())
+
+    rev_py = float(np.mean([r.revenue_rate_per_server for r in res_py]))
+    rev_jx = float(np.mean([r.revenue_rate_per_server for r in res_jx]))
+    eps_py = ev_py / wall_py
+    eps_jx = ev_jx / wall_jx
+    rows = [
+        {"engine": "python", "events": int(ev_py),
+         "wall_s": round(wall_py, 3), "events_per_sec": round(eps_py),
+         "rev_rate": round(rev_py, 2)},
+        {"engine": "ctmc_jax", "events": int(ev_jx),
+         "wall_s": round(wall_jx, 3), "events_per_sec": round(eps_jx),
+         "rev_rate": round(rev_jx, 2)},
+    ]
+    print(fmt_table(rows, ["engine", "events", "wall_s", "events_per_sec",
+                           "rev_rate"],
+                    f"\n[ctmc_speed] {REPS}-replication batch, n={n}, "
+                    f"horizon={horizon}"))
+    speedup = eps_jx / eps_py
+    print(f"[ctmc_speed] speedup {speedup:.1f}x "
+          f"(compile {wall_cold - wall_jx:.1f}s amortised)")
+    out = {
+        "n": n, "reps": REPS, "horizon": horizon, "warmup": warmup,
+        "events_python": ev_py, "events_jax": ev_jx,
+        "wall_python": wall_py, "wall_jax_warm": wall_jx,
+        "wall_jax_cold": wall_cold,
+        "events_per_sec_python": eps_py, "events_per_sec_jax": eps_jx,
+        "speedup": speedup,
+        "n_steps_jax": jsim.n_steps, "stepping": jsim.stepping,
+        "Lambda": jsim.Lambda,
+        "rev_rate_python": rev_py, "rev_rate_jax": rev_jx,
+        "rev_rate_rel_gap": abs(rev_py - rev_jx) / max(rev_py, 1e-12),
+        "t_end_ok": bool(np.all(np.asarray(raw["t"]) == horizon)),
+    }
+    save("ctmc_speed", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -12,9 +12,10 @@ import time
 import traceback
 
 from . import (bench_ablations, bench_calibration, bench_charging,
-               bench_classes, bench_convergence, bench_frontier,
-               bench_matched, bench_roofline, bench_scale_sweep,
-               bench_sensitivity, bench_sli_pareto, bench_trace_replay)
+               bench_classes, bench_convergence, bench_ctmc_speed,
+               bench_frontier, bench_matched, bench_roofline,
+               bench_scale_sweep, bench_sensitivity, bench_sli_pareto,
+               bench_trace_replay)
 from .common import ART
 
 
@@ -45,6 +46,7 @@ SUITE = [
     ("scale_sweep", bench_scale_sweep),        # EC.8.3
     ("classes", bench_classes),                # EC.8.4
     ("convergence", bench_convergence),        # EC.8.5
+    ("ctmc_speed", bench_ctmc_speed),          # uniformized engine micro-bench
     ("ablations", bench_ablations),            # EC.8.6
     ("sweep", _SweepCLI),                      # repro.sweep.run default grid
     ("roofline", bench_roofline),              # dry-run roofline table

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["AxisType", "shard_map", "make_mesh", "pcast"]
+__all__ = ["AxisType", "shard_map", "make_mesh", "pcast", "prng_key"]
 
 try:  # jax >= 0.5-ish: explicit axis types on mesh axes
     from jax.sharding import AxisType
@@ -31,6 +31,19 @@ else:
         # Older jax has no varying-manual-axes type system; replicated and
         # varying values are indistinguishable, so the cast is a no-op.
         return x
+
+
+def prng_key(seed: int):
+    """Raw uint32 PRNG key where available, new-style typed key otherwise.
+
+    The uniformized CTMC engine stacks per-replication keys for
+    ``jax.vmap``; raw ``PRNGKey`` arrays stack on every jax this repo
+    supports, while ``jax.random.key`` typed arrays are the only option
+    once ``PRNGKey`` is removed.
+    """
+    if hasattr(jax.random, "PRNGKey"):
+        return jax.random.PRNGKey(int(seed))
+    return jax.random.key(int(seed))
 
 
 def make_mesh(shape, axis_names, *, axis_types=None):

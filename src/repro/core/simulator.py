@@ -47,6 +47,7 @@ class CTMCResult:
     avg_ys: np.ndarray
     avg_qp: np.ndarray
     avg_qd: np.ndarray
+    n_events: int = 0  # transitions actually applied (excl. the final break)
     trajectory: Optional[dict] = field(default=None, repr=False)
 
 
@@ -261,6 +262,12 @@ class CTMCSimulator:
                 self.Qdm[i] -= 1
             (self.Ys if solo else self.Ym)[i] += 1
 
+    def _record(self, traj: dict, t: float) -> None:
+        traj["t"].append(t)
+        for key, v in (("x", self.X), ("ym", self.Ym), ("ys", self.Ys),
+                       ("qp", self.Qp), ("qd", self.Qdm + self.Qds)):
+            traj[key].append(v.copy())
+
     # -- main loop -------------------------------------------------------------
     def run(self, horizon: float, warmup: float = 0.0) -> CTMCResult:
         arr = self.arr
@@ -280,6 +287,7 @@ class CTMCSimulator:
             else None
         )
         next_rec = 0.0
+        n_events = 0
 
         t = 0.0
         rng = self.rng
@@ -310,21 +318,22 @@ class CTMCSimulator:
                 acc["qd"] += eff * (self.Qdm + self.Qds)
                 acc_t += eff
             if traj is not None and t_new >= next_rec:
-                traj["t"].append(t_new)
-                for key, v in (
-                    ("x", self.X),
-                    ("ym", self.Ym),
-                    ("ys", self.Ys),
-                    ("qp", self.Qp),
-                    ("qd", self.Qdm + self.Qds),
-                ):
-                    traj[key].append(v.copy())
-                next_rec = t_new + self.record_every
+                # clamp the sample time to the horizon and advance next_rec
+                # on the absolute record grid -- anchoring it at
+                # t_new + record_every would drift the sampling comb by one
+                # inter-event gap per sample (and let the final sample land
+                # at an off-grid time when record_every doesn't divide the
+                # horizon)
+                self._record(traj, min(t_new, horizon))
+                next_rec = (
+                    np.floor(t_new / self.record_every) + 1.0
+                ) * self.record_every
             t = t_new
             if t >= horizon:
                 break
 
             k = int(rng.choice(rates.size, p=rates / total))
+            n_events += 1
             cat, i = divmod(k, I)
             if cat == 0:  # arrival
                 arrivals[i] += 1
@@ -368,6 +377,10 @@ class CTMCSimulator:
                     self.Qdm[i] -= 1
                 ab_d[i] += 1
 
+        if traj is not None and (not traj["t"] or traj["t"][-1] < t):
+            # final sample at the (clamped) end time, so the trajectory
+            # always closes at min(t_end, horizon)
+            self._record(traj, t)
         meas = max(acc_t, 1e-12)
         return CTMCResult(
             t_end=t,
@@ -382,6 +395,7 @@ class CTMCSimulator:
             avg_ys=acc["ys"] / meas / self.n,
             avg_qp=acc["qp"] / meas / self.n,
             avg_qd=acc["qd"] / meas / self.n,
+            n_events=n_events,
             trajectory=(
                 {k: np.array(v) for k, v in traj.items()} if traj else None
             ),

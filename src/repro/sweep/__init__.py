@@ -6,8 +6,8 @@ the paper's convergence (EC.8.5) and scaling (EC.8.3) experiments.
 
 * :mod:`repro.sweep.spec` -- ``SweepSpec`` / ``SweepResult`` JSON schema,
   per-cell ``SeedSequence`` streams.
-* :mod:`repro.sweep.evaluators` -- policy-token registry + the ctmc / lp /
-  engine cell evaluators.
+* :mod:`repro.sweep.evaluators` -- policy-token registry + the ctmc /
+  ctmc_jax / lp / engine cell evaluators.
 * :mod:`repro.sweep.fluid_batch` -- ``jax.vmap``-batched fluid-ODE grid.
 * :mod:`repro.sweep.runner` -- :func:`run_sweep` grid executor.
 * :mod:`repro.sweep.run` -- ``python -m repro.sweep.run`` CLI.

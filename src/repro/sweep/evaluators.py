@@ -38,6 +38,7 @@ __all__ = [
     "parse_policy_token",
     "resolve_policy",
     "evaluate_ctmc_cells",
+    "evaluate_ctmc_jax_cells",
     "evaluate_lp_cell",
     "evaluate_trace_policy",
     "evaluate_engine_cell",
@@ -221,6 +222,48 @@ def evaluate_ctmc_cells(ctx: MixContext, token: str, n: int,
     # router plans with q_d pinned to zero, so its x*/y*/R* differ)
     plan = policy.plan if policy.plan is not None else ctx.plan("base")
     return [_ctmc_metrics(r, plan) for r in results]
+
+
+# ---------------------------------------------------------------------------
+# Uniformized JAX CTMC evaluator (same law, vmapped over the seed axis)
+# ---------------------------------------------------------------------------
+
+
+def evaluate_ctmc_jax_cells(ctx: MixContext, token: str, n: int,
+                            streams: Sequence[np.random.SeedSequence]) -> list:
+    """All seed replications of one (mix, policy, n) cell, as ONE
+    ``jax.vmap`` batch of the uniformized CTMC engine
+    (:class:`repro.core.ctmc_jax.UniformizedCTMC`).
+
+    Emits the same metric keys as the Python ``ctmc`` evaluator plus
+    three engine diagnostics: ``t_end`` (must equal the horizon --
+    smaller means the fixed step budget ran out), ``clip_steps``
+    (ticks-mode abandonment-cap clip count; 0 in the default events
+    mode) and ``n_events`` (real transitions simulated).  ``stepping``
+    and ``n_steps`` can be overridden via ``spec.extra["ctmc_jax"]``.
+    """
+    from repro.core.ctmc_jax import UniformizedCTMC
+
+    spec = ctx.spec
+    if spec.record_every > 0:
+        raise ValueError("the ctmc_jax evaluator does not record "
+                         "trajectories; use evaluator='ctmc'")
+    kw = dict(spec.extra.get("ctmc_jax", {}))
+    policy = resolve_policy(token, ctx, n)
+    sim = UniformizedCTMC(ctx.classes, ctx.prim, ctx.pricing, policy, n=n,
+                          horizon=spec.horizon, warmup=spec.warmup, **kw)
+    raw = sim.run_batch_raw([cell_int_seed(ss) for ss in streams])
+    results = sim.results_from_raw(raw)
+    clip = np.asarray(raw["clip_steps"])
+    plan = policy.plan if policy.plan is not None else ctx.plan("base")
+    out = []
+    for r, res in enumerate(results):
+        m = _ctmc_metrics(res, plan)
+        m["t_end"] = float(res.t_end)
+        m["clip_steps"] = float(clip[r])
+        m["n_events"] = float(res.n_events)
+        out.append(m)
+    return out
 
 
 # ---------------------------------------------------------------------------

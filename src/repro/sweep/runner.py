@@ -13,7 +13,8 @@ import time
 from typing import Callable, Optional
 
 from .evaluators import (MixContext, evaluate_ctmc_cells,
-                         evaluate_engine_cell, evaluate_lp_cell)
+                         evaluate_ctmc_jax_cells, evaluate_engine_cell,
+                         evaluate_lp_cell)
 from .spec import CellResult, SweepResult, SweepSpec, cell_seed_sequence
 
 __all__ = ["run_sweep"]
@@ -57,6 +58,9 @@ def run_sweep(spec: SweepSpec,
                         f"({spec.n_seeds} seeds)")
                     if spec.evaluator == "ctmc":
                         metrics_list = evaluate_ctmc_cells(
+                            ctx, token, n, streams)
+                    elif spec.evaluator == "ctmc_jax":
+                        metrics_list = evaluate_ctmc_jax_cells(
                             ctx, token, n, streams)
                     elif spec.evaluator == "engine":
                         metrics_list = [

@@ -4,8 +4,9 @@ A sweep evaluates the cross product
 
     workload mix  x  policy  x  cluster size n  x  seed replication
 
-under one of four evaluators (aggregate CTMC, vmapped fluid ODE, planning
-LP, per-server trace engine) and emits a single JSON artifact that every
+under one of five evaluators (aggregate CTMC, its vmapped uniformized JAX
+twin, vmapped fluid ODE, planning LP, per-server trace engine) and emits
+a single JSON artifact that every
 benchmark shares.  Randomness is fully determined by ``SweepSpec.seed``:
 each grid cell derives its own :class:`numpy.random.SeedSequence` from the
 cell's *coordinates*, so results are independent of iteration order and
@@ -38,7 +39,7 @@ __all__ = [
 ]
 
 SCHEMA_VERSION = 1
-EVALUATORS = ("ctmc", "fluid", "lp", "engine")
+EVALUATORS = ("ctmc", "ctmc_jax", "fluid", "lp", "engine")
 
 
 class SweepSchemaError(ValueError):

@@ -1,0 +1,163 @@
+"""Uniformized JAX CTMC engine: statistical equivalence to the Python
+event loop, bitwise determinism, conservation laws, and the sweep
+evaluator integration.  Also the regression test for the Python
+simulator's trajectory-recording clamp."""
+
+import numpy as np
+import pytest
+
+from repro.core.ctmc_jax import UniformizedCTMC
+from repro.core.planning import SLISpec, solve_bundled_lp
+from repro.core.policies import baseline_vllm, gate_and_route
+from repro.core.simulator import CTMCSimulator
+from repro.core.types import Pricing, ServicePrimitives, WorkloadClass
+
+CLASSES = [
+    WorkloadClass("decode_heavy", 300, 1000, arrival_rate=0.5, patience=0.1),
+    WorkloadClass("prefill_heavy", 3000, 400, arrival_rate=0.5, patience=0.1),
+]
+PRIM = ServicePrimitives()
+PRICE = Pricing(0.1, 0.2)
+
+
+@pytest.fixture(scope="module")
+def plan():
+    return solve_bundled_lp(CLASSES, PRIM, PRICE,
+                            sli=SLISpec(pin_zero_decode_queue=True))
+
+
+def _half_width(vals):
+    return 1.96 * np.std(vals, ddof=1) / np.sqrt(len(vals))
+
+
+@pytest.mark.parametrize("make_policy", [gate_and_route, baseline_vllm],
+                         ids=["gate_and_route", "baseline_vllm"])
+def test_statistical_equivalence(plan, make_policy):
+    """Revenue rate and average occupancies agree between the engines
+    within 2 CI half-widths on the 2-class, n=50 EC.8.5 instance."""
+    policy = make_policy(plan)
+    n, horizon, warmup, reps = 50, 40.0, 10.0, 12
+
+    sim = CTMCSimulator(CLASSES, PRIM, PRICE, policy, n=n)
+    res_py = sim.run_batch(horizon, warmup=warmup,
+                           rngs=np.random.SeedSequence(7).spawn(reps))
+    jsim = UniformizedCTMC(CLASSES, PRIM, PRICE, policy, n=n,
+                           horizon=horizon, warmup=warmup)
+    raw = jsim.run_batch_raw(list(range(reps)))
+    res_jx = jsim.results_from_raw(raw)
+
+    # the fixed step budget covered the horizon and nothing was clipped
+    assert np.all(np.asarray(raw["t"]) == horizon)
+    assert np.asarray(raw["clip_steps"]).sum() == 0
+
+    rr_py = np.array([r.revenue_rate_per_server for r in res_py])
+    rr_jx = np.array([r.revenue_rate_per_server for r in res_jx])
+    tol = 2.0 * (_half_width(rr_py) + _half_width(rr_jx))
+    assert abs(rr_py.mean() - rr_jx.mean()) <= tol
+
+    for attr in ("avg_x", "avg_ym", "avg_ys"):
+        a_py = np.array([getattr(r, attr) for r in res_py])
+        a_jx = np.array([getattr(r, attr) for r in res_jx])
+        for i in range(len(CLASSES)):
+            tol = 2.0 * (_half_width(a_py[:, i]) + _half_width(a_jx[:, i]))
+            assert abs(a_py[:, i].mean() - a_jx[:, i].mean()) <= tol + 1e-4
+
+
+def test_determinism_same_key_bitwise(plan):
+    """Same PRNG seeds => bitwise-identical outputs; different => not."""
+    jsim = UniformizedCTMC(CLASSES, PRIM, PRICE, gate_and_route(plan),
+                           n=10, horizon=5.0, warmup=1.0)
+    a = jsim.run_batch_raw([3, 4])
+    b = jsim.run_batch_raw([3, 4])
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+    c = jsim.run_batch_raw([3, 5])
+    assert float(np.asarray(a["rev"])[1]) != float(np.asarray(c["rev"])[1])
+    # single-run API agrees with the batched one
+    r0 = jsim.run(3)
+    assert r0.revenue == float(np.asarray(a["rev"])[0])
+
+
+def test_conservation_laws(plan):
+    """Pathwise per-class flow conservation in the scanned engine."""
+    jsim = UniformizedCTMC(CLASSES, PRIM, PRICE, gate_and_route(plan),
+                           n=20, horizon=20.0)
+    raw = {k: np.asarray(v) for k, v in jsim.run_raw(11).items()}
+    in_system = (raw["qp"] + raw["x"] + raw["qdm"] + raw["qds"]
+                 + raw["ym"] + raw["ys"])
+    lhs = raw["arrivals"]
+    rhs = raw["completions"] + raw["ab_p"] + raw["ab_d"] + in_system
+    np.testing.assert_allclose(lhs, rhs, atol=1e-5)
+    # capacity invariants at the end state
+    assert raw["x"].sum() <= jsim.M + 1e-5
+    assert raw["ym"].sum() <= (PRIM.batch_cap - 1) * jsim.M + 1e-5
+    assert raw["ys"].sum() <= PRIM.batch_cap * (jsim.n - jsim.M) + 1e-5
+
+
+def test_ticks_mode_matches_events_mode(plan):
+    """Strict Lambda-clock stepping has the same law as the self-loop
+    skipped default (coarse check on the mean revenue rate)."""
+    kw = dict(n=20, horizon=20.0, warmup=5.0)
+    ev = UniformizedCTMC(CLASSES, PRIM, PRICE, gate_and_route(plan), **kw)
+    tk = UniformizedCTMC(CLASSES, PRIM, PRICE, gate_and_route(plan),
+                         stepping="ticks", **kw)
+    assert tk.n_steps > ev.n_steps  # self-loops make the tick budget larger
+    r_ev = [r.revenue_rate_per_server for r in ev.run_batch(range(8))]
+    r_tk = [r.revenue_rate_per_server for r in tk.run_batch(range(8))]
+    tol = 2.0 * (_half_width(r_ev) + _half_width(r_tk))
+    assert abs(np.mean(r_ev) - np.mean(r_tk)) <= tol
+    raw = tk.run_batch_raw(range(8))
+    assert np.all(np.asarray(raw["t"]) == 20.0)
+    assert np.asarray(raw["clip_steps"]).sum() == 0
+
+
+def test_sweep_evaluator_integration(tmp_path):
+    """The ctmc_jax evaluator fills the grid with schema-valid cells and
+    is deterministic across runs of the same spec."""
+    from repro.sweep import SweepSpec, run_sweep
+    from repro.sweep.run import default_mix
+
+    spec = SweepSpec(name="t_jax", evaluator="ctmc_jax",
+                     policies=("gate_and_route",), n_servers=(10, 20),
+                     n_seeds=2, seed=5, mixes=(default_mix("two_class"),),
+                     horizon=5.0, warmup=1.0)
+    res = run_sweep(spec)
+    assert len(res.cells) == spec.n_cells
+    m = res.cells[0].metrics
+    for key in ("revenue_rate", "gap_pct", "t_end", "clip_steps",
+                "n_events", "avg_x/0"):
+        assert key in m
+    assert m["t_end"] == spec.horizon and m["clip_steps"] == 0
+    assert run_sweep(spec).fingerprint() == res.fingerprint()
+    res.save(tmp_path / "t_jax_sweep.json")  # exercises validate_payload
+
+
+def test_record_every_rejected():
+    from repro.sweep import SweepSpec, run_sweep
+    from repro.sweep.run import default_mix
+
+    spec = SweepSpec(name="t_rec", evaluator="ctmc_jax",
+                     policies=("gate_and_route",), n_servers=(10,),
+                     n_seeds=1, mixes=(default_mix("two_class"),),
+                     horizon=2.0, record_every=0.5)
+    with pytest.raises(ValueError, match="trajector"):
+        run_sweep(spec)
+
+
+def test_python_trajectory_clamped_to_horizon(plan):
+    """Regression: with record_every not dividing the horizon, samples
+    must stay on the record grid (no drift) and the trajectory must
+    close at exactly the horizon."""
+    horizon, rec = 5.0, 0.7
+    sim = CTMCSimulator(CLASSES, PRIM, PRICE, gate_and_route(plan), n=10,
+                        seed=13, record_every=rec)
+    res = sim.run(horizon)
+    t = res.trajectory["t"]
+    assert t.size >= 2
+    assert np.all(np.diff(t) > 0)
+    assert t.max() <= horizon
+    assert t[-1] == horizon
+    # one in-loop sample per crossed grid cell: no comb drift
+    cells = np.floor(t[:-1] / rec).astype(int)
+    assert np.unique(cells).size == cells.size
+    assert t.size <= int(np.floor(horizon / rec)) + 2

@@ -1,11 +1,17 @@
 #!/usr/bin/env python3
-"""Docs health check: every internal markdown link must resolve.
+"""Docs health check: links must resolve, evaluator names must exist.
 
 Scans the repo's markdown docs for inline links/images and verifies that
 relative targets exist on disk (external http(s)/mailto links are
 skipped; pure #fragment links are checked against the current file's
-headings). Exits nonzero with a listing of broken links. Run from the
-repo root; CI runs this next to the tier-1 suite.
+headings).  Additionally cross-checks every sweep-evaluator name the
+docs mention -- ``--evaluator <name>`` CLI examples, ``"evaluator":
+"<name>"`` JSON snippets, and ``\\`name\\` evaluator`` / ``evaluator
+\\`name\\``` prose -- against the registry (``EVALUATORS`` in
+``repro.sweep.spec``, the names dispatched to
+``repro.sweep.evaluators``), so documented evaluators cannot silently
+rot.  Exits nonzero with a listing of problems. Run from the repo root;
+CI runs this next to the tier-1 suite.
 """
 
 from __future__ import annotations
@@ -14,10 +20,18 @@ import re
 import sys
 from pathlib import Path
 
-DOCS = ("README.md", "docs/ARCHITECTURE.md", "benchmarks/README.md",
-        "ROADMAP.md", "CHANGES.md")
+DOCS = ("README.md", "docs/ARCHITECTURE.md", "docs/SIMULATORS.md",
+        "benchmarks/README.md", "ROADMAP.md", "CHANGES.md")
 
 LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+
+# how docs name sweep evaluators (CLI flag, JSON schema, backticked prose)
+EVALUATOR_RES = (
+    re.compile(r"--evaluator[ =]+([a-z_][a-z_,]*)"),
+    re.compile(r"\"evaluator\":\s*\"([a-z_]+)\""),
+    re.compile(r"`([a-z_]+)` evaluator"),
+    re.compile(r"evaluators? `([a-z_]+)`"),
+)
 
 
 def heading_anchors(md: str) -> set:
@@ -36,8 +50,29 @@ def heading_anchors(md: str) -> set:
     return anchors
 
 
+def known_evaluators(root: Path):
+    """The evaluator registry, or an error string if it cannot load."""
+    sys.path.insert(0, str(root / "src"))
+    try:
+        from repro.sweep.spec import EVALUATORS
+        return set(EVALUATORS), None
+    except Exception as exc:  # missing dep / broken import = check error
+        return None, f"cannot import repro.sweep.spec ({exc})"
+
+
+def mentioned_evaluators(md: str):
+    names = set()
+    for rx in EVALUATOR_RES:
+        for m in rx.finditer(md):
+            names.update(p for p in m.group(1).split(",") if p)
+    return names
+
+
 def check(root: Path) -> list:
     errors = []
+    registry, reg_err = known_evaluators(root)
+    if reg_err:
+        errors.append(f"evaluator registry: {reg_err}")
     for rel in DOCS:
         doc = root / rel
         if not doc.exists():
@@ -56,6 +91,11 @@ def check(root: Path) -> list:
             resolved = (doc.parent / path).resolve()
             if not resolved.exists():
                 errors.append(f"{rel}: broken link {target}")
+        if registry is not None:
+            for name in sorted(mentioned_evaluators(md) - registry):
+                errors.append(
+                    f"{rel}: evaluator {name!r} not in repro.sweep "
+                    f"registry {sorted(registry)}")
     return errors
 
 
