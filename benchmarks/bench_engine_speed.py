@@ -1,0 +1,119 @@
+"""Micro-benchmark: iterations/sec of the JAX trace-replay engine vs the
+Python event loop.
+
+Replays the same Azure-like trace 32 times (one replication per PRNG
+seed) through :class:`repro.serving.engine_sim.ClusterEngine` (serial
+Python loop) and :class:`repro.serving.engine_jax.ClusterEngineJAX` (one
+``jax.vmap`` batch) under online-free gate-and-route, and reports
+simulated server *iterations* per wall-second for each.  The JAX engine
+is timed twice -- once cold (including jit compilation) and once warm --
+and the headline ``speedup`` uses the warm number, the steady-state
+throughput a sweep sees after its first cell.  Revenue rates are
+cross-checked (same trace, same policy, near-identical trajectories), so
+the speedup is apples to apples.
+
+Artifact: ``artifacts/bench/engine_speed.json`` with per-engine
+iterations/sec, the warm/cold walls, the scan budget, and the agreement
+gap.  Acceptance bar for the repo: ``speedup >= 10`` at the
+32-replication batch.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.planning import solve_bundled_lp
+from repro.core.policies import gate_and_route
+from repro.data.traces import TraceConfig, synth_azure_trace
+from repro.serving.engine_jax import ClusterEngineJAX
+from repro.serving.engine_sim import ClusterEngine, EngineConfig
+from repro.sweep.evaluators import planner_classes_from_trace
+
+from .common import PRICING, PRIM, fmt_table, save
+
+REPS = 32
+
+
+def run(quick: bool = True) -> dict:
+    import jax
+
+    n = 10
+    tcfg = (TraceConfig(horizon=30.0, base_rate=2.0, compression=0.06,
+                        seed=42)
+            if quick else
+            TraceConfig(horizon=90.0, base_rate=2.0, compression=0.05,
+                        seed=42))
+    trace = synth_azure_trace(tcfg)
+    horizon = tcfg.horizon
+    classes = planner_classes_from_trace(trace, n)
+    plan = solve_bundled_lp(classes, PRIM, PRICING)
+    policy = gate_and_route(plan)
+
+    # -- Python event loop (one fresh engine per replication, serial) -----
+    t0 = time.perf_counter()
+    it_py = 0
+    res_py = []
+    for r in range(REPS):
+        eng = ClusterEngine(classes, policy,
+                            EngineConfig(PRIM, PRICING, n, seed=r))
+        m = eng.run(trace, horizon=horizon)
+        it_py += m.n_iters
+        res_py.append(m.revenue_rate())
+    wall_py = time.perf_counter() - t0
+
+    # -- JAX engine (one vmapped scan over the replication batch) ---------
+    jeng = ClusterEngineJAX(classes, policy,
+                            EngineConfig(PRIM, PRICING, n), trace,
+                            horizon=horizon)
+    seeds = list(range(REPS))
+    t0 = time.perf_counter()
+    jax.block_until_ready(jeng.run_batch_raw(seeds))
+    wall_cold = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    raw = jeng.run_batch_raw([s + REPS for s in seeds])
+    jax.block_until_ready(raw)
+    wall_jx = time.perf_counter() - t0
+    res_jx = jeng.summaries_from_raw(raw)
+    it_jx = float(np.asarray(raw["n_iters"]).sum())
+
+    rev_py = float(np.mean(res_py))
+    rev_jx = float(np.mean([m["revenue_rate"] for m in res_jx]))
+    ips_py = it_py / wall_py
+    ips_jx = it_jx / wall_jx
+    rows = [
+        {"engine": "python", "iters": int(it_py),
+         "wall_s": round(wall_py, 3), "iters_per_sec": round(ips_py),
+         "rev_rate": round(rev_py, 2)},
+        {"engine": "engine_jax", "iters": int(it_jx),
+         "wall_s": round(wall_jx, 3), "iters_per_sec": round(ips_jx),
+         "rev_rate": round(rev_jx, 2)},
+    ]
+    print(fmt_table(rows, ["engine", "iters", "wall_s", "iters_per_sec",
+                           "rev_rate"],
+                    f"\n[engine_speed] {REPS}-replication batch, n={n}, "
+                    f"{len(trace)} requests, horizon={horizon}"))
+    speedup = ips_jx / ips_py
+    print(f"[engine_speed] speedup {speedup:.1f}x "
+          f"(compile {wall_cold - wall_jx:.1f}s amortised)")
+    out = {
+        "n": n, "reps": REPS, "horizon": horizon,
+        "n_requests": len(trace),
+        "iters_python": float(it_py), "iters_jax": it_jx,
+        "wall_python": wall_py, "wall_jax_warm": wall_jx,
+        "wall_jax_cold": wall_cold,
+        "iters_per_sec_python": ips_py, "iters_per_sec_jax": ips_jx,
+        "speedup": speedup,
+        "n_steps_jax": jeng.n_steps,
+        "rev_rate_python": rev_py, "rev_rate_jax": rev_jx,
+        "rev_rate_rel_gap": abs(rev_py - rev_jx) / max(rev_py, 1e-12),
+        "budget_exhausted": float(max(m["budget_exhausted"]
+                                      for m in res_jx)),
+    }
+    save("engine_speed", out)
+    return out
+
+
+if __name__ == "__main__":
+    run(quick=True)

@@ -38,7 +38,12 @@ def matched_synthetic(trace, seed=0):
     return reqs
 
 
-def run(quick: bool = True) -> dict:
+def run(quick: bool = True, engine: str = "python") -> dict:
+    """``engine="jax"`` replays both traces in the JAX engine with
+    open-loop gate-and-route; the real-vs-synthetic gap is a
+    within-table comparison, so the EC.8.2 question is answered either
+    way (batch replications over seeds -- where the JAX engine wins --
+    are not needed for this deterministic policy)."""
     rows = []
     ns = [5, 10] if quick else [5, 10, 20]
     for n in ns:
@@ -47,9 +52,9 @@ def run(quick: bool = True) -> dict:
         trace = synth_azure_trace(tcfg)
         synth = matched_synthetic(trace)
         r_real = run_trace_policy("gate_and_route", trace, n,
-                                  horizon=tcfg.horizon)
+                                  horizon=tcfg.horizon, engine=engine)
         r_syn = run_trace_policy("gate_and_route", synth, n,
-                                 horizon=tcfg.horizon)
+                                 horizon=tcfg.horizon, engine=engine)
         gap = 100 * (r_syn["revenue_rate"] / max(r_real["revenue_rate"],
                                                  1e-9) - 1)
         rows.append({"n": n,
@@ -57,11 +62,18 @@ def run(quick: bool = True) -> dict:
                      "synthetic_rev": round(r_syn["revenue_rate"], 1),
                      "gap_pct": round(gap, 2)})
     print(fmt_table(rows, ["n", "real_rev", "synthetic_rev", "gap_pct"],
-                    "\n[matched] synthetic-vs-trace across scale"))
-    out = {"rows": rows}
-    save("matched", out)
+                    f"\n[matched] synthetic-vs-trace across scale "
+                    f"({engine} engine)"))
+    out = {"rows": rows, "engine": engine}
+    save("matched" if engine == "python" else f"matched_{engine}", out)
     return out
 
 
 if __name__ == "__main__":
-    run(quick=True)
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--engine", default="python", choices=("python", "jax"))
+    a = ap.parse_args()
+    run(quick=not a.full, engine=a.engine)

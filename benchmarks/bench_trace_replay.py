@@ -28,27 +28,40 @@ COLS = ["policy", "revenue_rate", "completion_rate", "ttft_mean", "ttft_p95",
         "ttft_p99", "tpot_mean", "tpot_p95", "tpot_p99"]
 
 
-def _one_replay(tag: str, tcfg: TraceConfig, n: int, quick: bool) -> list:
+def _one_replay(tag: str, tcfg: TraceConfig, n: int, quick: bool,
+                engine: str = "python") -> list:
     trace = synth_azure_trace(tcfg)
     rows = []
     for pol in ("gate_and_route", "sarathi", "vllm"):
-        s = run_trace_policy(pol, trace, n, horizon=tcfg.horizon)
+        s = run_trace_policy(pol, trace, n, horizon=tcfg.horizon,
+                             engine=engine)
         rows.append(dict(round_vals(s), policy=pol))
     ks = ([2, 4, 6] if quick else range(1, n))
     for variant in ("mix_solo", "prefill_solo"):
-        s = best_fixed_split(variant, trace, n, ks=ks, horizon=tcfg.horizon)
+        s = best_fixed_split(variant, trace, n, ks=ks, horizon=tcfg.horizon,
+                             engine=engine)
         rows.append(dict(round_vals(s), policy=f"distserve_{variant}"))
-    print(fmt_table(rows, COLS, f"\n[trace_replay] {tag} ({n} servers)"))
+    print(fmt_table(rows, COLS,
+                    f"\n[trace_replay] {tag} ({n} servers, {engine} engine)"))
     return rows
 
 
-def run(quick: bool = True) -> dict:
+def run(quick: bool = True, engine: str = "python") -> dict:
+    """``engine="jax"`` replays the same tables in
+    :class:`repro.serving.engine_jax.ClusterEngineJAX`.  The win is the
+    DistServe comparator: the whole k-scan runs as ONE vmapped batch
+    (the split is just the traced ``Mi`` parameter), so ``--full`` mode
+    -- where the two k in 1..n-1 scans dominate -- gets the batched
+    engine's throughput; the three single-policy replays don't batch
+    and are faster on the Python engine.  The jax path runs open-loop
+    (gate-and-route without the online controller), so its numbers are
+    comparable within the table, not with the python-engine artifact."""
     n = 10
     out = {
         "azure2023": _one_replay("2023 Azure-like replay", TRACE_2023, n,
-                                 quick),
+                                 quick, engine),
         "azure2024": _one_replay("2024 Azure-like replay", TRACE_2024, n,
-                                 quick),
+                                 quick, engine),
     }
     # headline check: ours leads on revenue in both slices
     leads = {}
@@ -57,9 +70,17 @@ def run(quick: bool = True) -> dict:
         best_other = max(r["revenue_rate"] for r in rows[1:])
         leads[f"{tag}_lead_pct"] = 100 * (ours - best_other) / best_other
     out.update(leads)
-    save("trace_replay", out)
+    out["engine"] = engine
+    save("trace_replay" if engine == "python" else f"trace_replay_{engine}",
+         out)
     return out
 
 
 if __name__ == "__main__":
-    run(quick=True)
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--engine", default="python", choices=("python", "jax"))
+    a = ap.parse_args()
+    run(quick=not a.full, engine=a.engine)

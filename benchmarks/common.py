@@ -5,6 +5,8 @@ from __future__ import annotations
 import json
 from pathlib import Path
 
+import numpy as np
+
 from repro.core.types import Pricing, ServicePrimitives
 from repro.sweep.evaluators import (evaluate_trace_policy,
                                     planner_classes_from_trace)
@@ -30,28 +32,105 @@ def planner_classes(trace, n, n_classes=2, theta=3e-4):
 def run_trace_policy(policy_name: str, trace, n: int, *, prim=PRIM,
                      pricing=PRICING, horizon=600.0, online=True,
                      seed=42, sli=None, distserve_k=None,
-                     safety=3.0) -> dict:
+                     safety=3.0, engine="python") -> dict:
     """One (policy, trace) evaluation in the calibrated engine.
 
     Thin wrapper over :func:`repro.sweep.evaluators.evaluate_trace_policy`,
-    which is also the sweep subsystem's "engine" cell evaluator."""
+    which is also the sweep subsystem's "engine" cell evaluator.
+
+    ``engine="jax"`` replays the trace in the vmapped
+    :class:`repro.serving.engine_jax.ClusterEngineJAX` instead -- the
+    fast path for policy tables; it runs open-loop (no online
+    controller), so pair it only with like-for-like comparisons."""
     token = policy_name
     if distserve_k is not None:
         token = f"{policy_name}:k={int(distserve_k)}"
+    if engine == "jax":
+        return run_trace_policy_jax(token, trace, n, prim=prim,
+                                    pricing=pricing, horizon=horizon,
+                                    seed=seed, sli=sli)
     return evaluate_trace_policy(token, trace, n, prim=prim, pricing=pricing,
                                  horizon=horizon, online=online, seed=seed,
                                  sli=sli, safety=safety)
 
 
-def best_fixed_split(variant: str, trace, n: int, ks=None, **kw) -> dict:
-    """DistServe-style comparator: scan fixed splits, report the best."""
-    ks = ks if ks is not None else range(1, n)
+def run_trace_policy_jax(token: str, trace, n: int, *, prim=PRIM,
+                         pricing=PRICING, horizon=600.0, seed=42,
+                         sli=None) -> dict:
+    """One (policy, trace) evaluation in the JAX trace-replay engine.
+
+    Same policy tokens and summary keys as the Python path (plus the
+    engine diagnostics); successive calls that only vary the DistServe
+    split k reuse one compiled scan, which is what makes
+    :func:`best_fixed_split` cheap under ``engine="jax"``."""
+    from repro.core.planning import solve_bundled_lp
+    from repro.serving.engine_jax import ClusterEngineJAX
+    from repro.sweep.evaluators import (_distserve_k, engine_policy_and_cfg,
+                                        parse_policy_token)
+
+    classes = planner_classes_from_trace(trace, n)
+    plan = solve_bundled_lp(classes, prim, pricing, sli=sli)
+    policy, cfg = engine_policy_and_cfg(token, plan, prim, pricing, n,
+                                        seed=seed)
+    out = ClusterEngineJAX(classes, policy, cfg, trace,
+                           horizon=horizon).run(seed)
+    name, args = parse_policy_token(token)
+    if name.startswith("distserve_"):
+        out["distserve_k"] = float(_distserve_k(args, n))
+    return {k: float(v) for k, v in out.items()}
+
+
+def best_fixed_split(variant: str, trace, n: int, ks=None,
+                     engine="python", **kw) -> dict:
+    """DistServe-style comparator: scan fixed splits, report the best.
+
+    Under ``engine="jax"`` the whole k-scan runs as ONE
+    ``jax.vmap``-batched replay (the split only changes the traced
+    ``Mi`` parameter, so every k shares a single compiled step) --
+    this is where the trace-replay fast path pays off."""
+    ks = list(ks) if ks is not None else list(range(1, n))
+    if engine == "jax":
+        return _best_fixed_split_jax(variant, trace, n, ks, **kw)
     best = None
     for k in ks:
         s = run_trace_policy(f"distserve_{variant}", trace, n,
                              online=False, distserve_k=k, **kw)
         if best is None or s["revenue_rate"] > best["revenue_rate"]:
             best = dict(s, k=k)
+    return best
+
+
+def _best_fixed_split_jax(variant: str, trace, n: int, ks, *, prim=PRIM,
+                          pricing=PRICING, horizon=600.0, seed=42,
+                          sli=None) -> dict:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.planning import solve_bundled_lp
+    from repro.data.traces import tensorize_trace
+    from repro.serving.engine_jax import ClusterEngineJAX, run_engine_multi
+    from repro.sweep.evaluators import engine_policy_and_cfg
+
+    classes = planner_classes_from_trace(trace, n)
+    plan = solve_bundled_lp(classes, prim, pricing, sli=sli)
+    tt = tensorize_trace(trace)  # shared across the k axis
+    engines = []
+    for k in ks:
+        policy, cfg = engine_policy_and_cfg(
+            f"distserve_{variant}:k={int(k)}", plan, prim, pricing, n,
+            seed=seed)
+        engines.append(ClusterEngineJAX(classes, policy, cfg, tt,
+                                        horizon=horizon))
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                     *[e.params for e in engines])
+    keys = jnp.stack([e._key(seed) for e in engines])
+    raw = run_engine_multi(stacked, keys, **engines[0]._static)
+    host = {kk: np.asarray(v) for kk, v in raw.items()}
+    best = None
+    for i, k in enumerate(ks):
+        s = engines[i]._summary({kk: v[i] for kk, v in host.items()})
+        if best is None or s["revenue_rate"] > best["revenue_rate"]:
+            best = dict(s, k=int(k), distserve_k=float(k))
     return best
 
 

@@ -13,9 +13,9 @@ import traceback
 
 from . import (bench_ablations, bench_calibration, bench_charging,
                bench_classes, bench_convergence, bench_ctmc_speed,
-               bench_frontier, bench_matched, bench_roofline,
-               bench_scale_sweep, bench_sensitivity, bench_sli_pareto,
-               bench_trace_replay)
+               bench_engine_speed, bench_frontier, bench_matched,
+               bench_roofline, bench_scale_sweep, bench_sensitivity,
+               bench_sli_pareto, bench_trace_replay)
 from .common import ART
 
 
@@ -47,6 +47,7 @@ SUITE = [
     ("classes", bench_classes),                # EC.8.4
     ("convergence", bench_convergence),        # EC.8.5
     ("ctmc_speed", bench_ctmc_speed),          # uniformized engine micro-bench
+    ("engine_speed", bench_engine_speed),      # trace-replay engine micro-bench
     ("ablations", bench_ablations),            # EC.8.6
     ("sweep", _SweepCLI),                      # repro.sweep.run default grid
     ("roofline", bench_roofline),              # dry-run roofline table

@@ -20,8 +20,14 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-__all__ = ["Request", "TraceConfig", "synth_azure_trace", "load_trace_csv",
+__all__ = ["Request", "TraceConfig", "TraceValidationError", "TraceTensors",
+           "synth_azure_trace", "load_trace_csv", "validate_requests",
+           "tensorize_trace", "untensorize_trace",
            "dolly_classes", "DOLLY_STATS"]
+
+
+class TraceValidationError(ValueError):
+    """A request trace violates the invariants every engine assumes."""
 
 
 @dataclass
@@ -82,6 +88,43 @@ def _lognormal(rng, mean, cv, size=None):
     return rng.lognormal(mu, np.sqrt(sigma2), size=size)
 
 
+def validate_requests(reqs: Sequence[Request],
+                      source: str = "trace") -> Sequence[Request]:
+    """Shared validation behind every trace source (and tensorization).
+
+    Both engines assume arrival times are finite, nonnegative and
+    nondecreasing, and token lengths strictly positive; a violation used
+    to surface only as downstream NaNs (empty metrics, silent zero
+    revenue).  Raises :class:`TraceValidationError` naming the offending
+    request instead.  Returns ``reqs`` unchanged so call sites can chain.
+    """
+    t_prev = 0.0
+    for k, r in enumerate(reqs):
+        if not np.isfinite(r.t_arrival) or r.t_arrival < 0:
+            raise TraceValidationError(
+                f"{source}: request {r.rid} (index {k}) has non-finite or "
+                f"negative arrival time {r.t_arrival!r}")
+        if r.t_arrival < t_prev:
+            raise TraceValidationError(
+                f"{source}: arrival times must be nondecreasing, but "
+                f"request {r.rid} (index {k}) arrives at {r.t_arrival} "
+                f"after one at {t_prev}")
+        t_prev = r.t_arrival
+        if not r.prompt_len >= 1 or not r.decode_len >= 1:
+            raise TraceValidationError(
+                f"{source}: request {r.rid} (index {k}) has non-positive "
+                f"token lengths P={r.prompt_len}, D={r.decode_len}")
+        if not r.patience > 0:  # NaN fails this too
+            raise TraceValidationError(
+                f"{source}: request {r.rid} (index {k}) has non-positive "
+                f"patience {r.patience!r} (use inf for no deadline)")
+        if r.cls < 0:
+            raise TraceValidationError(
+                f"{source}: request {r.rid} (index {k}) has negative "
+                f"class {r.cls}")
+    return reqs
+
+
 def synth_azure_trace(cfg: TraceConfig = TraceConfig()) -> list[Request]:
     """Generate a bursty multiclass trace; timestamps already compressed."""
     rng = np.random.default_rng(cfg.seed)
@@ -109,6 +152,7 @@ def synth_azure_trace(cfg: TraceConfig = TraceConfig()) -> list[Request]:
         D = max(2, int(_lognormal(rng, p.mean_decode, p.cv_decode)))
         reqs.append(Request(rid, t * cfg.compression, i, P, D))
         rid += 1
+    validate_requests(reqs, source="synth_azure_trace")
     return reqs
 
 
@@ -135,7 +179,100 @@ def load_trace_csv(path: str, compression: float = 1.0,
                 )
             )
     out.sort(key=lambda r: r.t_arrival)
+    validate_requests(out, source=f"load_trace_csv({path})")
     return out
+
+
+# ---------------------------------------------------------------------------
+# Tensorization (the JAX trace-replay engine's input format)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TraceTensors:
+    """A trace as padded, fixed-shape arrays (``engine_jax`` input).
+
+    All arrays share the padded length ``R``; rows with ``valid == False``
+    are padding (``t`` is ``+inf`` there so masked time-minima ignore
+    them).  ``rid`` is always ``arange(R)`` for the first ``n_real`` rows:
+    tensorization re-ids requests in arrival order, which is what makes
+    per-class FCFS a masked ``argmin`` over ``rid``.  ``n_dropped`` counts
+    requests cut by the ``max_requests`` cap (never silent: the engine
+    surfaces it as a diagnostic).
+    """
+
+    rid: np.ndarray        # (R,) int32, arange
+    t: np.ndarray          # (R,) float64 arrival times, +inf on padding
+    cls: np.ndarray        # (R,) int32
+    P: np.ndarray          # (R,) int32 prompt tokens (1 on padding)
+    D: np.ndarray          # (R,) int32 decode tokens (1 on padding)
+    patience: np.ndarray   # (R,) float64 deadlines (inf = none)
+    valid: np.ndarray      # (R,) bool
+    n_real: int
+    n_dropped: int = 0
+
+    @property
+    def R(self) -> int:
+        return int(self.rid.shape[0])
+
+    @property
+    def n_classes(self) -> int:
+        m = self.cls[self.valid]
+        return int(m.max()) + 1 if m.size else 1
+
+
+def tensorize_trace(reqs: Sequence[Request],
+                    max_requests: Optional[int] = None,
+                    pad_to: Optional[int] = None) -> TraceTensors:
+    """Pack a request list into padded arrays for the JAX engine.
+
+    ``max_requests`` caps the number of (earliest-arriving) requests kept;
+    the overflow count is recorded in ``n_dropped`` rather than silently
+    shifting load.  ``pad_to`` pads the arrays up to a fixed length so
+    traces of different sizes share one compiled scan (must be >= the
+    kept length).  Requests are validated (:func:`validate_requests`) and
+    re-numbered ``0..len-1`` in arrival order.
+    """
+    reqs = list(validate_requests(reqs, source="tensorize_trace"))
+    n_dropped = 0
+    if max_requests is not None and len(reqs) > max_requests:
+        n_dropped = len(reqs) - int(max_requests)
+        reqs = reqs[: int(max_requests)]
+    n_real = len(reqs)
+    R = max(n_real, 1) if pad_to is None else int(pad_to)
+    if R < n_real:
+        raise TraceValidationError(
+            f"pad_to={R} is smaller than the kept trace length {n_real}")
+    t = np.full(R, np.inf, dtype=np.float64)
+    cls = np.zeros(R, dtype=np.int32)
+    P = np.ones(R, dtype=np.int32)
+    D = np.ones(R, dtype=np.int32)
+    pat = np.full(R, np.inf, dtype=np.float64)
+    valid = np.zeros(R, dtype=bool)
+    for k, r in enumerate(reqs):
+        t[k] = r.t_arrival
+        cls[k] = r.cls
+        P[k] = int(r.prompt_len)
+        D[k] = int(r.decode_len)
+        pat[k] = r.patience
+        valid[k] = True
+    return TraceTensors(rid=np.arange(R, dtype=np.int32), t=t, cls=cls,
+                        P=P, D=D, patience=pat, valid=valid,
+                        n_real=n_real, n_dropped=n_dropped)
+
+
+def untensorize_trace(tt: TraceTensors) -> list[Request]:
+    """Inverse of :func:`tensorize_trace` (padding rows dropped).
+
+    Round-trips everything except the original ``rid`` labels, which
+    tensorization canonicalises to arrival order (the property tests pin
+    this contract down).
+    """
+    return [
+        Request(int(tt.rid[k]), float(tt.t[k]), int(tt.cls[k]),
+                int(tt.P[k]), int(tt.D[k]), float(tt.patience[k]))
+        for k in range(tt.R) if tt.valid[k]
+    ]
 
 
 def dolly_classes(names: Sequence[str], total_rate: float, patience: float = 0.0):

@@ -1,5 +1,5 @@
 """Serving substrate: jitted steps, real-compute engine/cluster, calibrated
-iteration-level cluster simulator."""
+iteration-level cluster simulator and its jit/vmap trace-replay twin."""
 
 from .steps import (  # noqa: F401
     init_server_state,
@@ -8,3 +8,4 @@ from .steps import (  # noqa: F401
     make_prefill_step,
 )
 from .engine_sim import ClusterEngine, EngineConfig, EngineMetrics  # noqa: F401
+from .engine_jax import ClusterEngineJAX  # noqa: F401

@@ -1,0 +1,901 @@
+"""JAX-batched iteration-level trace-replay engine (jit + vmap).
+
+Same system as :class:`repro.serving.engine_sim.ClusterEngine` -- the
+paper's calibrated per-server scheduling simulator (Section 6.2): each
+logical server advances in iterations, a mixed iteration (one prefill
+chunk of up to C tokens + co-resident decode streams) takes ``tau_mix =
+alpha + beta * chunk`` seconds, a decode-only iteration ``tau_solo(K) =
+a_s + b_s * K`` (K = resident KV tokens) -- re-expressed so the event
+loop becomes a fixed-budget scanned step function and a replication
+batch one ``jax.vmap`` over PRNG keys, following the
+``repro.core.ctmc_jax`` playbook.  The Python :class:`ClusterEngine`
+remains the semantics oracle; ``tests/test_engine_jax.py`` holds the two
+engines to statistical equivalence on shared traces.
+
+**Tensorized traces.**  Input is a :class:`repro.data.traces.TraceTensors`
+(padded ``(rid, t, class, P, D, patience)`` arrays with a max-requests
+cap).  Requests are re-numbered in arrival order, which makes every
+queue a *pointer pair over a precomputed table*: arrivals are consumed
+by one monotone cursor (arrival times are sorted), and each class's
+FCFS prefill queue is a sliding window ``[qhead_i, qarr_i)`` over the
+host-precomputed table of that class's rids in arrival order.  The
+decode buffer is a ring of rids (pushes are monotone -- each request is
+buffered at most once -- so the ring never wraps).  Per-server residency
+lives in ``(n, B)`` slot arrays; per-request lifecycle state lives in
+``(R,)`` arrays touched only by point gathers and a small, fixed number
+of scatters.  One event costs ``O(n*B + B + I)`` *work*, independent of
+the trace length ``R``; since a point-scatter costs a full array pass on
+CPU XLA, the step is additionally organised to touch each ``(R,)`` array
+at most once (all lifecycle transitions flush through ONE combined
+scatter-max -- the state codes are ordered along the lifecycle, so max
+composes even when a request transitions twice in one event).  This is
+what makes the step competitive with (and ~10x faster than, batched)
+the Python heap loop.
+
+**One event per step.**  Each step advances to the next event -- the
+earliest pending arrival or the earliest iteration boundary (``argmin``
+over per-server ``t_next``; ties resolve arrival-first, matching the
+Python heap's push order) -- and applies it branchlessly:
+
+1. decode emissions for the finishing server's snapshot participants
+   (a per-slot ``live`` flag replicates continuous-batching semantics:
+   jobs placed mid-iteration wait for the next boundary),
+2. prefill-chunk progress (tracked per *server* -- one active prefill
+   each -- so it never touches the request axis); a finished prefill is
+   pushed to the decode buffer (or per-server pending state for the
+   ``immediate`` router),
+3. decode dispatch.  At most ``freed-slots + 1 <= B + 1`` placements
+   can happen per event (an invariant of the dispatch discipline), so
+   for the deterministic global-buffer routers dispatch is ONE
+   closed-form ranked assignment over a ``B+1`` window of the FCFS
+   ring: servers contribute free slots in routing order to a cumulative
+   array, ring jobs map FCFS rank ``j`` to the server covering slot
+   ``j`` -- exactly the Python engine's fill-servers-in-order /
+   jobs-in-FCFS-order loop with no sequential sub-steps.  The
+   ``immediate`` and ``randomized`` routers keep a bounded placement
+   loop (per-placement uniform server draws + EC.7 class weights, like
+   the Python engine's rng usage),
+4. at most one prefill admission via a branchless gate ``argmax``
+   (occupancy deviation with queue-deviation tie-break, decode/prompt
+   priority ratio, or the exact head-of-line class for FCFS -- exact,
+   not the aggregate CTMC's proportional draw, because the queue heads
+   are available here).  One admission per event suffices: the gate
+   family maintains the invariant that after every event either no
+   prefill slot is free or no admissible class waits, and each event
+   frees at most one prefill slot or adds one waiting job,
+5. one wake pass (slot snapshot + iteration-time computation) after
+   admission -- the Python engine's step-5 order; a server the dispatch
+   phase would have woken while idle which then drew the admission
+   starts decode-only, its prefill waiting for the next boundary,
+   exactly like the oracle.
+
+**Iteration budget and loop form.**  The step budget is the minimum of
+two *hard* bounds (no stochastic tail -- everything is deterministic
+given the trace): the pathwise bound ``arrivals + sum_r ceil(P_r /
+chunk_min) + sum_r D_r`` (every iteration advances a prefill chunk or
+emits at least one decode token) and the clock bound ``arrivals + n *
+(h_eff / tau_min + 1)`` (every iteration lasts at least ``tau_min =
+min(alpha + beta, tau_solo)``).  ``loop="while"`` (default) runs the
+step under ``jax.lax.while_loop`` capped at that budget but exiting as
+soon as no event is pending before the horizon; ``loop="scan"`` runs
+the strict fixed-shape ``jax.lax.scan`` over the full budget (useful
+for profiling or step-coupled experiments -- the two forms are
+bitwise-identical in their results, the scan just pays for its no-op
+tail).  If a caller-supplied ``max_steps`` truncates the budget, the
+engine reports ``budget_exhausted`` (next pending event still before
+the horizon) -- detected, never silent.  ``docs/SIMULATORS.md`` carries
+the derivation.
+
+**Documented deviations** from the Python oracle (all measure-zero or
+deadline-only; the equivalence tests quantify them):
+
+* deadline expiry is checked at pop time like the Python engine, but an
+  expired pop consumes one of the event's bounded placements, and queue
+  expiry drops at most one expired head per class per event (the Python
+  engine drains all of them) -- identical for the default ``patience =
+  inf`` traces (where the whole expiry machinery compiles away), a
+  small lag otherwise;
+* when several decodes are placed on one idle server in a single event,
+  all of them join its first iteration (the Python engine wakes the
+  server at the first placement, so later placements wait a boundary);
+* the randomized router consumes a different PRNG stream (per-step
+  ``fold_in`` draws vs. a shared ``numpy`` generator), so randomized
+  policies match statistically, not bitwise;
+* exact-tie tie-breaks (simultaneous events, equal-arrival FCFS heads)
+  resolve by index rather than heap counter.
+
+Not supported (use the Python engine): server failures/recoveries,
+stragglers, the online controller (rolling-window replanning), and
+``record_queues_every`` traces.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.compat import prng_key
+from repro.core.ctmc_jax import _categorical
+from repro.core.policies import (FCFSGate, OccupancyGate, PolicySpec,
+                                 PriorityRatioGate)
+from repro.core.types import WorkloadClass
+from repro.data.traces import TraceTensors, tensorize_trace
+
+from .engine_sim import EngineConfig
+
+__all__ = ["ClusterEngineJAX", "iteration_budget", "run_engine",
+           "run_engine_batch", "run_engine_multi"]
+
+# request lifecycle (int32 codes carried through the scan)
+_NOT_ARRIVED, _QUEUED, _PREFILL, _BUF, _DECODE, _DONE, _ABANDONED = range(7)
+
+_EPS_TARGET = 1e-12  # OccupancyGate's "class is never admitted" threshold
+
+
+def _gate_kind(policy: PolicySpec) -> str:
+    gate = policy.gate
+    if isinstance(gate, OccupancyGate):
+        return "occupancy"
+    if isinstance(gate, PriorityRatioGate):
+        return "priority"
+    if isinstance(gate, FCFSGate):
+        return "fcfs"
+    raise ValueError(
+        f"engine_jax does not support gate {type(gate).__name__}; "
+        "use the Python ClusterEngine")
+
+
+def iteration_budget(tt: TraceTensors, cfg: EngineConfig, h_eff: float,
+                     *, arrived: Optional[np.ndarray] = None) -> int:
+    """Hard upper bound on events (arrivals + iteration completions).
+
+    ``min(pathwise, clock)`` -- both bounds are deterministic given the
+    trace, so no Poisson slack is needed (see the module docstring and
+    ``docs/SIMULATORS.md`` for the derivation).
+    """
+    prim = cfg.prim
+    if arrived is None:
+        arrived = tt.valid & (tt.t <= h_eff)
+    A = int(arrived.sum())
+    P = tt.P[arrived].astype(np.float64)
+    D = tt.D[arrived].astype(np.float64)
+    if cfg.vllm_unchunked:
+        chunks = np.ones_like(P)
+    elif cfg.sarathi_budget:
+        c_min = max(1, prim.chunk - (prim.batch_cap - 1))
+        chunks = np.ceil(P / c_min)
+    else:
+        chunks = np.ceil(P / prim.chunk)
+    pathwise = float(chunks.sum() + D.sum())
+    tau_min = min(prim.alpha + prim.beta, prim.tau_solo)
+    clock = cfg.n_servers * (h_eff / tau_min + 1.0)
+    return A + int(np.ceil(min(pathwise, clock))) + 16
+
+
+def _build_step(params: dict, key, *, n: int, B: int, gate_kind: str,
+                router_kind: str, charging: str, partition: str,
+                sarathi: bool, unchunked: bool, prefill_only: bool,
+                has_pw: bool, expiry: bool):
+    dtype = params["t_arr"].dtype
+    R = params["t_arr"].shape[0]
+    I = params["x_star"].shape[0]
+    W = B + 1  # placement bound per event: freed slots + the routed job
+    sid = jnp.arange(n, dtype=jnp.int32)
+    iota_I = jnp.arange(I, dtype=jnp.int32)
+    iota_W = jnp.arange(W, dtype=jnp.int32)
+    inf = jnp.asarray(jnp.inf, dtype)
+    t_arr, cls = params["t_arr"], params["cls"]
+    P, D, patience = params["P"], params["D"], params["patience"]
+    # the ranked-assignment routers never read per-request lifecycle
+    # state inside the step, so every ``st`` write can be deferred into
+    # ONE combined scatter-max per step (a point-scatter costs a full
+    # array pass on CPU XLA, so the scatter count on (R,) arrays is what
+    # the step's wall time is made of)
+    fast_st = router_kind in ("solo_first", "local_fcfs")
+    need_tbuf = (expiry or router_kind == "immediate"
+                 or (router_kind == "randomized" and has_pw))
+
+    def f(b):
+        return b.astype(dtype)
+
+    def rc(idx):
+        return jnp.clip(idx, 0, R - 1)
+
+    def used_of(slot_rid):
+        return jnp.sum(f(slot_rid >= 0), axis=1)  # (n,)
+
+    def cap_of(pf_rid):
+        """Per-server decode-slot capacity given current prefill state."""
+        has_pf = f(pf_rid >= 0)
+        if partition == "none":
+            return params["B"] - has_pf
+        mixed = sid < params["Mi"]
+        cap_mixed = (jnp.zeros(n, dtype) if prefill_only
+                     else params["B"] - has_pf)
+        return jnp.where(mixed, cap_mixed, params["B"])
+
+    def place_into(c, srv_i, j, ok):
+        """Scatter job ``j`` into the first empty slot of server
+        ``srv_i`` (masked by ``ok``) and flip its lifecycle state.
+        Used by the sequential (immediate / randomized) dispatchers."""
+        row = c["slot_rid"][srv_i]
+        slot = jnp.argmax(row < 0)
+        c["slot_rid"] = c["slot_rid"].at[srv_i, slot].max(
+            jnp.where(ok, j.astype(jnp.int32), -1))
+        c["st"] = c["st"].at[rc(j)].max(jnp.where(ok, _DECODE, -1))
+        if "srv" in c:
+            c["srv"] = c["srv"].at[rc(j)].set(
+                jnp.where(ok, srv_i.astype(jnp.int32), c["srv"][rc(j)]))
+        return c
+
+    def wake(c, now, active, force_solo):
+        """Start an iteration on every non-busy server with work
+        (snapshot semantics: resident decodes join, chunk is fixed).
+
+        ``force_solo`` marks servers the Python engine would have woken
+        *during* dispatch -- before the admission step could hand them a
+        prefill -- so their iteration starts decode-only and the prefill
+        waits for the next boundary, exactly like the oracle."""
+        used = used_of(c["slot_rid"])
+        has_pf = c["pf_rid"] >= 0
+        do = active & ~c["busy"] & (has_pf | (used > 0))
+        pl = c["pf_left"]  # per-server: one active prefill per server
+        if unchunked:
+            chn = pl
+        elif sarathi:
+            chn = jnp.clip(params["C"] - used, 0.0, pl)
+        else:
+            chn = jnp.minimum(pl, params["C"])
+        chn = jnp.where(has_pf & ~force_solo, chn, 0.0)
+        occupied = c["slot_rid"] >= 0
+        src = rc(c["slot_rid"])
+        pfr = rc(c["pf_rid"])
+        kv = (jnp.sum(jnp.where(occupied, P[src] + c["tout"][src], 0.0),
+                      axis=1)
+              + jnp.where(has_pf, P[pfr] - pl, 0.0))
+        tau = jnp.where(has_pf & (chn > 0),
+                        params["alpha"] + params["beta"] * chn,
+                        params["tau_solo"] + params["b_s"] * kv)
+        c["chunk"] = jnp.where(do, chn, c["chunk"])
+        c["t_next"] = jnp.where(do, now + tau, c["t_next"])
+        c["busy"] = c["busy"] | do
+        c["slot_live"] = c["slot_live"] | (do[:, None] & occupied)
+        return c
+
+    def step(carry, idx):
+        c = dict(carry)
+        u = (jax.random.uniform(jax.random.fold_in(key, idx),
+                                (2 * W + 1,), dtype=dtype)
+             if router_kind == "randomized" else None)
+        st_idx, st_val = [], []  # deferred combined scatter (fast_st)
+
+        def st_max(c, idx_, val_):
+            if fast_st:
+                st_idx.append(jnp.atleast_1d(idx_.astype(jnp.int32)))
+                st_val.append(jnp.atleast_1d(val_.astype(jnp.int32)))
+            else:
+                c["st"] = c["st"].at[idx_].max(val_)
+            return c
+
+        # ---- next event: earliest arrival vs earliest iteration end ----
+        ap = c["aptr"]
+        ta = jnp.where(f(ap) < params["A"], t_arr[rc(ap)], inf)
+        se = jnp.argmin(c["t_next"])
+        tsv = c["t_next"][se]
+        now = jnp.minimum(ta, tsv)
+        active = now <= params["h_eff"]
+        is_arr = active & (ta <= tsv)  # heap pushes arrivals first: ties
+        is_iter = active & ~is_arr     # resolve arrival-before-iteration
+
+        # ---- arrival: advance the cursor, push to the class queue ------
+        ca = cls[rc(ap)]
+        c = st_max(c, rc(ap), jnp.where(is_arr, _QUEUED, -1))
+        c["qarr"] = c["qarr"] + jnp.where(is_arr & (iota_I == ca), 1, 0)
+        c["aptr"] = ap + jnp.where(is_arr, 1, 0)
+
+        # ---- iteration end on server `se` (small per-server state is
+        #      updated elementwise so the whole block fuses) -------------
+        at_se = sid == se
+        c["busy"] = c["busy"] & ~(at_se & is_iter)
+        c["t_next"] = jnp.where(at_se & is_iter, inf, c["t_next"])
+        # 1) snapshot decodes emit one token each (B-sized gathers; the
+        #    scatters use add/min/max so clip-aliased empty slots -- all
+        #    mapped to index 0 -- contribute identities, never clobbers)
+        row = c["slot_rid"][se]
+        rr = rc(row)
+        live = is_iter & (row >= 0) & c["slot_live"][se]
+        tout_new = c["tout"][rr] + 1.0  # live slots hold distinct rids
+        c["tout"] = c["tout"].at[rr].add(f(live))
+        c["t_first"] = c["t_first"].at[rr].min(jnp.where(live, now, inf))
+        c["t_last"] = c["t_last"].at[rr].max(jnp.where(live, now, -inf))
+        done = live & (tout_new >= D[rr])
+        if charging == "separate":
+            reward = params["c_d"] * D[rr]
+        else:
+            reward = params["c_p"] * P[rr] + params["c_d"] * D[rr]
+        c["rev"] = c["rev"] + jnp.sum(jnp.where(done, reward, 0.0))
+        c = st_max(c, rr, jnp.where(done, _DONE, -1))
+        if "srv" in c:
+            c["srv"] = c["srv"].at[rr].min(
+                jnp.where(done, -1, jnp.iinfo(jnp.int32).max))
+        done_row = at_se[:, None] & done[None, :]
+        c["slot_rid"] = jnp.where(done_row, -1, c["slot_rid"])
+        c["slot_live"] = c["slot_live"] & ~done_row
+        # 2) prefill-chunk progress + routing of a finished prefill
+        #    (prefill-left is per-server: one active prefill per server)
+        pf = c["pf_rid"][se]
+        has_pf = is_iter & (pf >= 0)
+        pfc = rc(pf)
+        pln = c["pf_left"][se] - c["chunk"][se]
+        c["pf_left"] = c["pf_left"] - jnp.where(at_se & has_pf,
+                                                c["chunk"][se], 0.0)
+        pf_done = has_pf & (pln <= 0)
+        if charging == "separate":
+            c["rev"] = c["rev"] + jnp.where(pf_done,
+                                            params["c_p"] * P[pfc], 0.0)
+        if need_tbuf:
+            c["t_buf"] = c["t_buf"].at[pfc].set(
+                jnp.where(pf_done, now, c["t_buf"][pfc]))
+        c = st_max(c, pfc, jnp.where(pf_done, _BUF, -1))
+        c["X"] = c["X"] - jnp.where(pf_done & (iota_I == cls[pfc]),
+                                    1.0, 0.0)
+        c["pf_rid"] = jnp.where(at_se & pf_done, -1, c["pf_rid"])
+        if router_kind == "randomized":
+            go_solo = u[0] <= params["p_solo"][cls[pfc]]
+            c["pool"] = c["pool"].at[pfc].set(
+                jnp.where(pf_done, jnp.where(go_solo, 0, 1),
+                          c["pool"][pfc]))
+            if not has_pw:  # pool FCFS rings
+                for pid, ring in ((0, "buf_s"), (1, "buf_m")):
+                    push = pf_done & (c["pool"][pfc] == pid)
+                    tl = c[f"{ring}_tl"]
+                    c[ring] = c[ring].at[tl].max(jnp.where(push, pf, -1))
+                    c[f"{ring}_tl"] = tl + jnp.where(push, 1, 0)
+        elif router_kind == "immediate":
+            # stays pending on `se`: mark the target in srv
+            c["srv"] = c["srv"].at[pfc].set(
+                jnp.where(pf_done, se.astype(jnp.int32), c["srv"][pfc]))
+        else:  # single global FCFS ring (solo_first / local_fcfs)
+            tl = c["buf_tl"]
+            c["buf"] = c["buf"].at[tl].max(jnp.where(pf_done, pf, -1))
+            c["buf_tl"] = tl + jnp.where(pf_done, 1, 0)
+
+        # 3) decode dispatch.  For the deterministic global-buffer routers
+        #    this is one closed-form ranked assignment over a W-window of
+        #    the FCFS ring (at most freed-slots + 1 <= W placements can
+        #    happen per event): servers contribute free slots in routing
+        #    order via a cumulative array, ring jobs map rank j to the
+        #    server covering slot j -- exactly the Python engine's
+        #    fill-servers-in-order / jobs-in-FCFS-order loop.
+        busy_pre = c["busy"]  # dispatch-time idleness (se already cleared)
+        if router_kind in ("solo_first", "local_fcfs"):
+            hd, tl = c["buf_hd"], c["buf_tl"]
+            win = jax.lax.dynamic_slice(c["buf"], (hd,), (W,))
+            jw = rc(win)
+            valid = (hd + iota_W < tl) & is_iter
+            if expiry:
+                expired = valid & (now - c["t_buf"][jw] > patience[jw])
+            else:  # patience == inf everywhere: nothing ever expires
+                expired = jnp.zeros(W, bool)
+            pe = valid & ~expired  # placeable
+            erank = jnp.cumsum(f(pe)) - f(pe)  # exclusive FCFS rank
+            free = jnp.maximum(cap_of(c["pf_rid"])
+                               - used_of(c["slot_rid"]), 0.0)
+            free_sorted = free[params["perm_srv"]]
+            cumfree = jnp.cumsum(free_sorted)
+            totfree = cumfree[-1]
+            consumed = valid & (erank < totfree)  # popped (placed/expired)
+            place = pe & (erank < totfree)
+            pos = jnp.searchsorted(cumfree, erank, side="right")
+            server = params["perm_srv"][jnp.clip(pos, 0, n - 1)]
+            within = erank - jnp.where(pos > 0,
+                                       cumfree[jnp.maximum(pos - 1, 0)],
+                                       0.0)
+            # k-th empty physical slot of each server (stable sort puts
+            # empty slots first, in index order)
+            esort = jnp.argsort(c["slot_rid"] >= 0, axis=1)
+            slot = esort[server, jnp.clip(within.astype(jnp.int32),
+                                          0, B - 1)]
+            c["slot_rid"] = c["slot_rid"].at[server, slot].max(
+                jnp.where(place, win, -1))
+            c = st_max(c, jw,
+                       jnp.where(place, _DECODE,
+                                 jnp.where(consumed & expired,
+                                           _ABANDONED, -1)))
+            c["buf_hd"] = hd + jnp.sum(jnp.where(consumed, 1, 0))
+            c["abandons"] = c["abandons"] + jnp.sum(f(consumed & expired))
+            placed_srv = jnp.zeros(n, bool).at[server].max(place)
+        elif router_kind == "immediate":
+            # pending jobs live as BUF with srv == se; FCFS by t_buf
+            placed_any = jnp.zeros((), bool)
+            for k in range(W):
+                cap_se = cap_of(c["pf_rid"])[se]
+                used_se = used_of(c["slot_rid"])[se]
+                elig = (c["st"] == _BUF) & (c["srv"] == se)
+                j = jnp.argmin(jnp.where(elig, c["t_buf"], inf))
+                do = is_iter & elig.any() & (used_se < cap_se)
+                expired = now - c["t_buf"][j] > patience[j]
+                c["st"] = c["st"].at[j].max(
+                    jnp.where(do & expired, _ABANDONED, -1))
+                c["abandons"] = c["abandons"] + f(do & expired)
+                c = place_into(c, se, j, do & ~expired)
+                placed_any = placed_any | (do & ~expired)
+            placed_srv = at_se & placed_any
+        else:  # randomized: solo pool drains first; uniform server draw
+            solo_srv = sid >= params["Mi"]
+            placed_srv = jnp.zeros(n, bool)
+            for k in range(W):
+                u1, u2 = u[2 * k + 1], u[2 * k + 2]
+                cap = cap_of(c["pf_rid"])
+                used = used_of(c["slot_rid"])
+                free = cap - used > 0
+                free_s = solo_srv & free
+                free_m = ~solo_srv & free
+                if has_pw:  # EC.7 class weights need an in-buffer scan
+                    elig_s = (c["st"] == _BUF) & (c["pool"] == 0)
+                    elig_m = (c["st"] == _BUF) & (c["pool"] == 1)
+                    can_s = free_s.any() & elig_s.any()
+                    use_solo = can_s
+                    do = is_iter & (can_s | (free_m.any() & elig_m.any()))
+                    pool_elig = jnp.where(use_solo, elig_s, elig_m)
+                    j_fcfs = jnp.argmin(
+                        jnp.where(pool_elig, c["t_buf"], inf))
+                    pw = jnp.where(use_solo, params["pw_s"],
+                                   params["pw_m"])
+                    present = jnp.zeros(I, dtype).at[cls].add(
+                        f(pool_elig)) > 0
+                    w = jnp.maximum(pw, 0.0) * f(present)
+                    ci = _categorical(u1, w)
+                    j_w = jnp.argmin(jnp.where(
+                        pool_elig & (cls == ci), c["t_buf"], inf))
+                    j = jnp.where(w.sum() > 0, j_w, j_fcfs)
+                    pop = do & (c["st"][j] == _BUF)  # guard no-op lanes
+                    expired = now - c["t_buf"][j] > patience[j]
+                    c["st"] = c["st"].at[j].max(
+                        jnp.where(pop & expired, _ABANDONED, -1))
+                else:  # plain pool FCFS: ring heads
+                    can_s = (free_s.any()
+                             & (c["buf_s_hd"] < c["buf_s_tl"]))
+                    can_m = (free_m.any()
+                             & (c["buf_m_hd"] < c["buf_m_tl"]))
+                    use_solo = can_s
+                    do = is_iter & (can_s | can_m)
+                    hd_s, hd_m = c["buf_s_hd"], c["buf_m_hd"]
+                    j = jnp.where(use_solo, c["buf_s"][rc(hd_s)],
+                                  c["buf_m"][rc(hd_m)])
+                    pop = do
+                    c["buf_s_hd"] = hd_s + jnp.where(pop & use_solo, 1, 0)
+                    c["buf_m_hd"] = hd_m + jnp.where(pop & ~use_solo, 1, 0)
+                    if expiry:
+                        expired = (now - c["t_buf"][rc(j)]
+                                   > patience[rc(j)])
+                    else:
+                        expired = jnp.zeros((), bool)
+                    c["st"] = c["st"].at[rc(j)].max(
+                        jnp.where(pop & expired, _ABANDONED, -1))
+                pool_free = jnp.where(use_solo, free_s, free_m)
+                sv = _categorical(u2, f(pool_free))
+                c["abandons"] = c["abandons"] + f(pop & expired)
+                c = place_into(c, sv, j, pop & ~expired)
+                placed_srv = placed_srv | ((sid == sv) & pop & ~expired)
+
+        # 4) at most one prefill admission (gate family invariant)
+        heads = params["class_rids"][iota_I, rc(c["qhead"])]
+        qlen = f(c["qarr"] - c["qhead"])
+        if expiry:
+            # lazy head expiry (at most one head per class per event)
+            hexp = (active & (qlen > 0)
+                    & (now - t_arr[rc(heads)] > patience[rc(heads)]))
+            c = st_max(c, rc(heads), jnp.where(hexp, _ABANDONED, -1))
+            c["qhead"] = c["qhead"] + jnp.where(hexp, 1, 0)
+            c["abandons"] = c["abandons"] + jnp.sum(f(hexp))
+            heads = params["class_rids"][iota_I, rc(c["qhead"])]
+            qlen = f(c["qarr"] - c["qhead"])
+
+        used2 = used_of(c["slot_rid"])
+        no_pf = c["pf_rid"] < 0
+        if partition == "none":
+            if router_kind == "immediate":
+                pend = _count_pending(c, n, dtype)
+                canp = no_pf & (used2 + pend < params["B"])
+            else:
+                canp = no_pf & (used2 < params["B"])
+            if sarathi:
+                canp = canp & (used2 < params["B"] - 1)
+        else:
+            mixed = sid < params["Mi"]
+            if router_kind == "immediate":
+                pend = _count_pending(c, n, dtype)
+                capm = (jnp.zeros(n, dtype) if prefill_only
+                        else jnp.full(n, params["B"], dtype))
+                canp = mixed & no_pf & (used2 + pend < capm)
+            else:
+                canp = mixed & no_pf & (used2 <= params["B"] - 1)
+        canp = canp & active
+        tgt = jnp.argmin(jnp.where(canp, sid, 2 * n))  # first free server
+        if gate_kind == "occupancy":
+            gmask = (qlen >= 1) & (params["x_star"] > _EPS_TARGET)
+            xi = ((c["X"] + 1.0 - params["n_f"] * params["x_star"])
+                  / jnp.maximum(params["x_star"], 1e-30))
+            keyv = jnp.where(gmask, xi, inf)
+            tie = gmask & (keyv == keyv.min())
+            delta = qlen - params["n_f"] * params["qp_star"]
+            cand = jnp.argmax(jnp.where(tie, delta, -inf))
+            can = gmask.any()
+        elif gate_kind == "priority":
+            gmask = qlen >= 1
+            cand = jnp.argmax(jnp.where(gmask, params["ratio"], -inf))
+            can = gmask.any()
+        else:  # fcfs: exact head-of-line class (oldest waiting request)
+            cand = jnp.argmin(jnp.where(qlen >= 1, heads, R))
+            can = (qlen >= 1).any()
+        admit = canp.any() & can
+        jr = heads[cand]
+        c = st_max(c, rc(jr), jnp.where(admit, _PREFILL, -1))
+        if "srv" in c:
+            c["srv"] = c["srv"].at[rc(jr)].set(
+                jnp.where(admit, tgt.astype(jnp.int32), c["srv"][rc(jr)]))
+        c["qhead"] = c["qhead"] + jnp.where(admit & (iota_I == cand), 1, 0)
+        c["X"] = c["X"] + jnp.where(admit & (iota_I == cand), 1.0, 0.0)
+        c["pf_rid"] = jnp.where(admit & (sid == tgt),
+                                jr.astype(jnp.int32), c["pf_rid"])
+        c["pf_left"] = jnp.where(admit & (sid == tgt), P[rc(jr)],
+                                 c["pf_left"])
+
+        # flush the deferred lifecycle transitions in ONE scatter-max
+        # (codes are ordered along the lifecycle, so max composes even
+        # when one request transitions twice in a single event)
+        if fast_st:
+            c["st"] = c["st"].at[jnp.concatenate(st_idx)].max(
+                jnp.concatenate(st_val))
+
+        # single wake pass, post-admission (the Python engine's step-5
+        # order).  A server the dispatch phase woke while idle -- which
+        # then drew the admission -- starts decode-only: its prefill
+        # joined after the Python wake and waits for the next boundary.
+        force_solo = placed_srv & ~busy_pre & admit & (sid == tgt)
+        c = wake(c, now, active, force_solo)
+
+        c["t"] = jnp.where(active, now, c["t"])
+        c["n_iters"] = c["n_iters"] + f(is_iter)
+        c["n_events"] = c["n_events"] + f(active)
+        # early-exit flag: is another event pending before the horizon?
+        ta2 = jnp.where(f(c["aptr"]) < params["A"],
+                        t_arr[rc(c["aptr"])], inf)
+        c["alive"] = jnp.minimum(ta2, c["t_next"].min()) <= params["h_eff"]
+        return c
+
+    return step
+
+
+def _count_pending(c, n, dtype):
+    """Pending-local counts for the immediate router (O(R) scan; only
+    compiled into the immediate/sarathi variant)."""
+    return jnp.zeros(n, dtype).at[jnp.clip(c["srv"], 0, n - 1)].add(
+        (c["st"] == _BUF).astype(dtype))
+
+
+def _init_carry(R: int, n: int, B: int, I: int, dtype,
+                router_kind: str, has_pw: bool, expiry: bool) -> dict:
+    W = B + 1
+    c = {
+        "st": jnp.zeros(R, jnp.int32),
+        "tout": jnp.zeros(R, dtype),
+        "t_first": jnp.full(R, jnp.inf, dtype),
+        "t_last": jnp.full(R, -jnp.inf, dtype),  # max-scatter identity
+        "slot_rid": jnp.full((n, B), -1, jnp.int32),
+        "slot_live": jnp.zeros((n, B), bool),
+        "pf_rid": jnp.full(n, -1, jnp.int32),
+        "pf_left": jnp.zeros(n, dtype),
+        "busy": jnp.zeros(n, bool),
+        "t_next": jnp.full(n, jnp.inf, dtype),
+        "chunk": jnp.zeros(n, dtype),
+        "aptr": jnp.zeros((), jnp.int32),
+        "qhead": jnp.zeros(I, jnp.int32),
+        "qarr": jnp.zeros(I, jnp.int32),
+        "X": jnp.zeros(I, dtype),
+        "t": jnp.zeros((), dtype),
+        "rev": jnp.zeros((), dtype),
+        "n_iters": jnp.zeros((), dtype),
+        "n_events": jnp.zeros((), dtype),
+        "abandons": jnp.zeros((), dtype),
+        "alive": jnp.ones((), bool),
+    }
+    if (expiry or router_kind == "immediate"
+            or (router_kind == "randomized" and has_pw)):
+        c["t_buf"] = jnp.full(R, jnp.inf, dtype)
+    if router_kind in ("solo_first", "local_fcfs"):
+        # +W slack so the dispatch window never clamps its start index
+        c["buf"] = jnp.full(R + W, -1, jnp.int32)
+        c["buf_hd"] = jnp.zeros((), jnp.int32)
+        c["buf_tl"] = jnp.zeros((), jnp.int32)
+    elif router_kind == "randomized" and not has_pw:
+        for ring in ("buf_s", "buf_m"):
+            c[ring] = jnp.full(R + W, -1, jnp.int32)
+            c[f"{ring}_hd"] = jnp.zeros((), jnp.int32)
+            c[f"{ring}_tl"] = jnp.zeros((), jnp.int32)
+    if router_kind == "immediate":
+        c["srv"] = jnp.full(R, -1, jnp.int32)
+    if router_kind == "randomized":
+        c["pool"] = jnp.full(R, -1, jnp.int32)
+    return c
+
+
+_STATICS = ("n_steps", "n", "B", "gate_kind", "router_kind", "charging",
+            "partition", "sarathi", "unchunked", "prefill_only", "has_pw",
+            "expiry", "loop")
+
+
+def _run_core(params, key, *, n_steps, n, B, gate_kind, router_kind,
+              charging, partition, sarathi, unchunked, prefill_only,
+              has_pw, expiry, loop="while"):
+    step = _build_step(params, key, n=n, B=B, gate_kind=gate_kind,
+                       router_kind=router_kind, charging=charging,
+                       partition=partition, sarathi=sarathi,
+                       unchunked=unchunked, prefill_only=prefill_only,
+                       has_pw=has_pw, expiry=expiry)
+    R = params["t_arr"].shape[0]
+    I = params["x_star"].shape[0]
+    init = _init_carry(R, n, B, I, params["t_arr"].dtype,
+                       router_kind, has_pw, expiry)
+    if loop == "scan":  # strict fixed-shape form (profiling / coupling)
+        def body(carry, idx):
+            return step(carry, idx), None
+
+        carry, _ = jax.lax.scan(body, init,
+                                jnp.arange(n_steps, dtype=jnp.uint32))
+        return carry
+    # early-exit form: same step, same budget cap, but the loop stops as
+    # soon as no event is pending before the horizon (the scan form pays
+    # for its no-op tail; this one does not)
+    def cond(state):
+        carry, i = state
+        return carry["alive"] & (i < n_steps)
+
+    def body(state):
+        carry, i = state
+        return step(carry, i.astype(jnp.uint32)), i + 1
+
+    carry, _ = jax.lax.while_loop(
+        cond, body, (init, jnp.zeros((), jnp.int32)))
+    return carry
+
+
+run_engine = jax.jit(_run_core, static_argnames=_STATICS)
+
+
+@partial(jax.jit, static_argnames=_STATICS)
+def run_engine_batch(params, keys, **statics):
+    """vmap of :func:`run_engine` over a leading batch of PRNG keys."""
+    return jax.vmap(lambda k: _run_core(params, k, **statics))(keys)
+
+
+@partial(jax.jit, static_argnames=_STATICS)
+def run_engine_multi(params, keys, **statics):
+    """vmap over a leading *instance* axis of params AND keys.
+
+    The instance axis can carry anything that only changes traced
+    parameters: a DistServe split scan (instances differ in ``Mi``), a
+    set of equal-shape traces replayed in lockstep (pad them to one
+    length with ``tensorize_trace(pad_to=...)``), or perturbed
+    primitives.  All instances share one compile; statics (shapes,
+    router/gate kinds) must match.
+    """
+    return jax.vmap(lambda p, k: _run_core(p, k, **statics))(params, keys)
+
+
+class ClusterEngineJAX:
+    """Batched trace-replay twin of :class:`ClusterEngine`.
+
+    Same classes/policy/:class:`EngineConfig` inputs and the same
+    summary-metric keys, but the trace and horizon are fixed at
+    construction (they determine the tensor shapes and the static scan
+    budget) and replications run as one ``jax.vmap`` batch over PRNG
+    keys.  Gate-and-route family, vLLM-, Sarathi- and DistServe-style
+    baselines are supported; failures and the online controller are not
+    (see the module docstring).
+
+    ``max_steps`` caps the scan budget below the hard bound; the
+    ``budget_exhausted`` diagnostic then reports whether the cap
+    truncated the replay.  ``max_requests`` caps the tensorized trace
+    (``n_dropped`` reports the overflow).
+    """
+
+    def __init__(self, classes: Sequence[WorkloadClass], policy: PolicySpec,
+                 cfg: EngineConfig, trace, horizon: float, *,
+                 drain: bool = False, max_steps: Optional[int] = None,
+                 max_requests: Optional[int] = None, loop: str = "while"):
+        if loop not in ("while", "scan"):
+            raise ValueError(f"loop must be while|scan, got {loop!r}")
+        if cfg.record_queues_every > 0:
+            raise ValueError("engine_jax does not record queue traces; "
+                             "use the Python ClusterEngine")
+        self.classes = tuple(classes)
+        self.I = len(self.classes)
+        self.policy = policy
+        self.cfg = cfg
+        self.n = int(cfg.n_servers)
+        prim = cfg.prim
+
+        tt = (trace if isinstance(trace, TraceTensors)
+              else tensorize_trace(trace, max_requests=max_requests))
+        self.trace = tt
+        if tt.n_real and int(tt.cls[tt.valid].max()) >= self.I:
+            raise ValueError(
+                f"trace references class {int(tt.cls[tt.valid].max())} but "
+                f"only {self.I} classes were given")
+
+        # horizon semantics of ClusterEngine.run: stop at the last prompt
+        # arrival unless draining (paper Section 6.2 convention)
+        arr_t = tt.t[tt.valid & (tt.t <= horizon)]
+        last_arrival = float(arr_t.max()) if arr_t.size else float(horizon)
+        self.h_eff = float(horizon) if drain else min(float(horizon),
+                                                      last_arrival)
+        arrived = tt.valid & (tt.t <= self.h_eff)
+
+        self.budget = iteration_budget(tt, cfg, self.h_eff, arrived=arrived)
+        self.n_steps = (self.budget if max_steps is None
+                        else min(self.budget, int(max_steps)))
+
+        self.gate_kind = _gate_kind(policy)
+        if policy.router not in ("solo_first", "local_fcfs", "immediate",
+                                 "randomized"):
+            raise ValueError(f"unknown router {policy.router!r}")
+        self.router_kind = policy.router
+        self.partition = "none" if policy.partition == "none" else "static"
+        self.M = int(policy.mixed_target(self.n))
+        pw_m, pw_s = policy.pool_weights_mixed, policy.pool_weights_solo
+        if (pw_m is None) != (pw_s is None):
+            raise ValueError("engine_jax needs both pool-weight vectors "
+                             "or neither")
+        self.has_pw = pw_m is not None
+
+        # per-class FCFS tables: class i's rids in arrival order (a class
+        # queue is then a [qhead, qarr) window over its table row)
+        class_rids = np.full((self.I, tt.R), tt.R, dtype=np.int32)
+        for i in range(self.I):
+            rids = np.nonzero(arrived & (tt.cls == i))[0]
+            class_rids[i, : rids.size] = rids
+
+        # static routing order: solo servers first for solo_first
+        # (dispatch fills servers along this permutation)
+        sids = np.arange(self.n, dtype=np.int32)
+        if self.router_kind == "solo_first":
+            perm_srv = np.concatenate([sids[self.M:], sids[: self.M]])
+        else:
+            perm_srv = sids
+
+        dt = jnp.result_type(float)
+        ones = np.ones(self.I)
+
+        def a(v):
+            return jnp.asarray(v, dtype=dt)
+
+        gate = policy.gate
+        self.params = {
+            "t_arr": a(np.where(arrived, tt.t, np.inf)),
+            "cls": jnp.asarray(tt.cls, jnp.int32),
+            "P": a(tt.P),
+            "D": a(tt.D),
+            "patience": a(tt.patience),
+            "class_rids": jnp.asarray(class_rids, jnp.int32),
+            "A": a(int(arrived.sum())),
+            "x_star": a(gate.x_star if isinstance(gate, OccupancyGate)
+                        else ones),
+            "qp_star": a(gate.qp_star if isinstance(gate, OccupancyGate)
+                         else 0 * ones),
+            "ratio": a(gate.ratio if isinstance(gate, PriorityRatioGate)
+                       else ones),
+            "p_solo": a(policy.solo_prob if policy.solo_prob is not None
+                        else ones),
+            "pw_m": a(pw_m if pw_m is not None else ones),
+            "pw_s": a(pw_s if pw_s is not None else ones),
+            "c_p": a(cfg.pricing.c_p),
+            "c_d": a(cfg.pricing.c_d),
+            "alpha": a(prim.alpha),
+            "beta": a(prim.beta),
+            "tau_solo": a(prim.tau_solo),
+            "b_s": a(cfg.solo_kv_slope),
+            "B": a(prim.batch_cap),
+            "C": a(prim.chunk),
+            "Mi": jnp.asarray(self.M, jnp.int32),
+            "perm_srv": jnp.asarray(perm_srv, jnp.int32),
+            "n_f": a(self.n),
+            "h_eff": a(self.h_eff),
+        }
+        self._static = dict(
+            n_steps=self.n_steps, n=self.n, B=int(prim.batch_cap),
+            gate_kind=self.gate_kind, router_kind=self.router_kind,
+            charging=policy.charging, partition=self.partition,
+            sarathi=bool(cfg.sarathi_budget),
+            unchunked=bool(cfg.vllm_unchunked),
+            prefill_only=bool(policy.prefill_only_mixed),
+            has_pw=self.has_pw,
+            # deadline machinery compiles away on the (default) traces
+            # where every request has patience == inf
+            expiry=bool(np.isfinite(tt.patience[arrived]).any()),
+            loop=loop)
+
+    # -- raw (device array) interface -------------------------------------
+    def _key(self, seed):
+        if isinstance(seed, (int, np.integer)):
+            return prng_key(int(seed))
+        return seed
+
+    def run_raw(self, seed) -> dict:
+        """One replication; returns the raw scan carry (device arrays)."""
+        return run_engine(self.params, self._key(seed), **self._static)
+
+    def run_batch_raw(self, seeds: Sequence) -> dict:
+        """All replications in one vmapped scan; leaves gain a leading
+        replication axis."""
+        keys = jnp.stack([self._key(s) for s in seeds])
+        return run_engine_batch(self.params, keys, **self._static)
+
+    # -- EngineMetrics.summary() interface ---------------------------------
+    def _summary(self, o: dict) -> dict:
+        st = np.asarray(o["st"])
+        t_first = np.asarray(o["t_first"], dtype=np.float64)
+        t_last = np.asarray(o["t_last"], dtype=np.float64)
+        t_arr = np.asarray(self.params["t_arr"], dtype=np.float64)
+        D = np.asarray(self.params["D"], dtype=np.float64)
+
+        arrivals = int((st != _NOT_ARRIVED).sum())
+        completions = int((st == _DONE).sum())
+        emitted = np.isfinite(t_first)
+        ttft = t_first[emitted] - t_arr[emitted]
+        tp_mask = (st == _DONE) & (D > 1)
+        tpot = ((t_last[tp_mask] - t_first[tp_mask])
+                / np.maximum(D[tp_mask] - 1.0, 1.0))
+
+        def pct(v, q):
+            return float(np.percentile(v, q)) if v.size else float("nan")
+
+        # budget diagnostic: an event still pending before the horizon
+        # means the step cap cut the replay short
+        ap = int(o["aptr"])
+        next_arr = (float(t_arr[ap]) if ap < t_arr.shape[0]
+                    and st[ap] == _NOT_ARRIVED else np.inf)
+        next_t = min(next_arr,
+                     float(np.asarray(o["t_next"], dtype=np.float64).min(
+                         initial=np.inf)))
+        horizon = self.h_eff if self.h_eff > 0 else 1.0
+        return {
+            "revenue_rate": float(o["rev"]) / horizon,
+            "completion_rate": completions / arrivals if arrivals else 0.0,
+            "ttft_mean": float(ttft.mean()) if ttft.size else float("nan"),
+            "ttft_p95": pct(ttft, 95),
+            "ttft_p99": pct(ttft, 99),
+            "tpot_mean": float(tpot.mean()) if tpot.size else float("nan"),
+            "tpot_p95": pct(tpot, 95),
+            "tpot_p99": pct(tpot, 99),
+            "completions": completions,
+            "arrivals": arrivals,
+            "abandons": int(o["abandons"]),
+            "t_end": float(o["t"]),
+            "budget_exhausted": float(next_t <= self.h_eff),
+            "n_iters": float(o["n_iters"]),
+            "n_events": float(o["n_events"]),
+            "n_steps": float(self.n_steps),
+            "n_dropped": float(self.trace.n_dropped),
+        }
+
+    def summaries_from_raw(self, raw: dict) -> list:
+        """Split a :meth:`run_batch_raw` carry into per-replication
+        summary dicts (:meth:`EngineMetrics.summary` keys + engine
+        diagnostics)."""
+        host = {k: np.asarray(v) for k, v in raw.items()}
+        reps = host["t"].shape[0]
+        return [self._summary({k: v[r] for k, v in host.items()})
+                for r in range(reps)]
+
+    def run(self, seed=0) -> dict:
+        return self._summary({k: np.asarray(v)
+                              for k, v in self.run_raw(seed).items()})
+
+    def run_batch(self, seeds: Sequence) -> list:
+        return self.summaries_from_raw(self.run_batch_raw(seeds))

@@ -89,6 +89,7 @@ class EngineMetrics:
     arrivals: int = 0
     completions: int = 0
     abandons: int = 0
+    n_iters: int = 0  # completed server iterations (throughput accounting)
     ttft: list = field(default_factory=list)
     tpot: list = field(default_factory=list)
     revenue_t: list = field(default_factory=list)  # (t, cumulative revenue)
@@ -381,6 +382,7 @@ class ClusterEngine:
         srv.busy = False
         if not srv.alive:
             return
+        self.metrics.n_iters += 1
         # 1) decode streams emit one token each (snapshot participants only)
         done = []
         for job in srv.iter_decodes:

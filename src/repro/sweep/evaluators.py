@@ -42,6 +42,7 @@ __all__ = [
     "evaluate_lp_cell",
     "evaluate_trace_policy",
     "evaluate_engine_cell",
+    "evaluate_engine_jax_cells",
 ]
 
 ABLATION_TOKENS = ("GG-SP", "FI-WSP", "GI-WSP", "GF-WSP", "FG-SP")
@@ -294,8 +295,37 @@ def evaluate_lp_cell(ctx: MixContext, token: str) -> dict:
 
 
 # ---------------------------------------------------------------------------
-# Per-server trace engine evaluator (Section 6.2 calibrated simulator)
+# Per-server trace engine evaluators (Section 6.2 calibrated simulator)
 # ---------------------------------------------------------------------------
+
+
+def engine_policy_and_cfg(token: str, plan, prim: ServicePrimitives,
+                          pricing: Pricing, n: int, seed: int = 0):
+    """Resolve a trace-engine policy token to ``(PolicySpec, EngineConfig)``.
+
+    Shared by the Python ``engine`` evaluator and the vmapped
+    ``engine_jax`` one, so both understand exactly the same token set:
+    ``gate_and_route``, ``sarathi`` (decode-first chunk budget), ``vllm``
+    (prefill-first; chunking stays a system property C, exactly as in the
+    paper's Section 2 model) and the two DistServe fixed splits.
+    """
+    from repro.serving.engine_sim import EngineConfig
+
+    name, args = parse_policy_token(token)
+    cfg = EngineConfig(prim, pricing, n, seed=seed)
+    if name == "gate_and_route":
+        policy = gate_and_route(plan)
+    elif name == "sarathi":
+        policy = baseline_sarathi(plan)
+        cfg = EngineConfig(prim, pricing, n, seed=seed, sarathi_budget=True)
+    elif name == "vllm":
+        policy = baseline_vllm(plan)
+    elif name in ("distserve_mix_solo", "distserve_prefill_solo"):
+        policy = baseline_distserve(plan, _distserve_k(args, n),
+                                    variant=name[len("distserve_"):])
+    else:
+        raise ValueError(f"engine evaluator got unknown policy {token!r}")
+    return policy, cfg
 
 
 def evaluate_trace_policy(token: str, trace, n: int, *,
@@ -322,26 +352,13 @@ def evaluate_trace_policy(token: str, trace, n: int, *,
     if plan is None:
         plan = solve_bundled_lp(classes, prim, pricing, sli=sli)
     name, args = parse_policy_token(token)
+    policy, cfg = engine_policy_and_cfg(token, plan, prim, pricing, n,
+                                        seed=seed)
     controller = None
-    cfg = EngineConfig(prim, pricing, n, seed=seed)
-    if name == "gate_and_route":
-        policy = gate_and_route(plan)
-        if online:
-            controller = OnlineController(
-                classes, prim, pricing, n=n,
-                config=OnlineControllerConfig(sli=sli, safety=safety))
-    elif name == "sarathi":
-        policy = baseline_sarathi(plan)
-        cfg = EngineConfig(prim, pricing, n, seed=seed, sarathi_budget=True)
-    elif name == "vllm":
-        # prefill-first scheduling; chunking stays a system property (C),
-        # exactly as in the paper's Section 2 model.
-        policy = baseline_vllm(plan)
-    elif name in ("distserve_mix_solo", "distserve_prefill_solo"):
-        policy = baseline_distserve(plan, _distserve_k(args, n),
-                                    variant=name[len("distserve_"):])
-    else:
-        raise ValueError(f"engine evaluator got unknown policy {token!r}")
+    if name == "gate_and_route" and online:
+        controller = OnlineController(
+            classes, prim, pricing, n=n,
+            config=OnlineControllerConfig(sli=sli, safety=safety))
     eng = ClusterEngine(classes, policy, cfg, controller=controller)
     m = eng.run(trace, horizon=horizon)
     out = m.summary()
@@ -363,3 +380,40 @@ def evaluate_engine_cell(ctx: MixContext, token: str, n: int,
         classes=ctx.trace_classes(n),
         plan=ctx.trace_plan(n),
     )
+
+
+def evaluate_engine_jax_cells(ctx: MixContext, token: str, n: int,
+                              streams: Sequence[np.random.SeedSequence]
+                              ) -> list:
+    """All seed replications of one (mix, policy, n) cell, as ONE
+    ``jax.vmap`` batch of the iteration-level trace-replay engine
+    (:class:`repro.serving.engine_jax.ClusterEngineJAX`).
+
+    Same policy tokens and summary-metric keys as the Python ``engine``
+    evaluator, plus four engine diagnostics: ``t_end`` (last processed
+    event time), ``budget_exhausted`` (1.0 iff the fixed scan budget cut
+    the replay short -- asserted 0 by the CI smoke), ``n_iters`` /
+    ``n_events`` (iterations / events simulated) and ``n_dropped``
+    (requests cut by a ``max_requests`` cap).  Differences from the
+    Python evaluator: the online controller is not supported, so
+    ``gate_and_route`` runs open-loop on the static plan, and engine
+    kwargs (``max_steps``, ``max_requests``, ``drain``) come from
+    ``spec.extra["engine_jax"]``.
+    """
+    from repro.serving.engine_jax import ClusterEngineJAX
+
+    spec = ctx.spec
+    if spec.record_every > 0:
+        raise ValueError("the engine_jax evaluator does not record "
+                         "queue traces; use evaluator='engine'")
+    kw = dict(spec.extra.get("engine_jax", {}))
+    policy, cfg = engine_policy_and_cfg(token, ctx.trace_plan(n), ctx.prim,
+                                        ctx.pricing, n)
+    eng = ClusterEngineJAX(ctx.trace_classes(n), policy, cfg, ctx.trace(n),
+                           horizon=spec.horizon, **kw)
+    out = eng.run_batch([cell_int_seed(ss) for ss in streams])
+    name, args = parse_policy_token(token)
+    if name.startswith("distserve_"):
+        for m in out:
+            m["distserve_k"] = _distserve_k(args, n)
+    return [{k: float(v) for k, v in m.items()} for m in out]

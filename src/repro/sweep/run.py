@@ -126,7 +126,8 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0,
                     help="master entropy for the per-cell streams")
     ap.add_argument("--evaluator", default="ctmc",
-                    choices=("ctmc", "ctmc_jax", "fluid", "lp", "engine"))
+                    choices=("ctmc", "ctmc_jax", "fluid", "lp", "engine",
+                             "engine_jax"))
     ap.add_argument("--mix", default="two_class", choices=sorted(MIX_PRESETS),
                     help="workload-mix preset")
     ap.add_argument("--horizon", type=float, default=90.0)

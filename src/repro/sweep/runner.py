@@ -14,7 +14,7 @@ from typing import Callable, Optional
 
 from .evaluators import (MixContext, evaluate_ctmc_cells,
                          evaluate_ctmc_jax_cells, evaluate_engine_cell,
-                         evaluate_lp_cell)
+                         evaluate_engine_jax_cells, evaluate_lp_cell)
 from .spec import CellResult, SweepResult, SweepSpec, cell_seed_sequence
 
 __all__ = ["run_sweep"]
@@ -66,6 +66,9 @@ def run_sweep(spec: SweepSpec,
                         metrics_list = [
                             evaluate_engine_cell(ctx, token, n, ss)
                             for ss in streams]
+                    elif spec.evaluator == "engine_jax":
+                        metrics_list = evaluate_engine_jax_cells(
+                            ctx, token, n, streams)
                     elif spec.evaluator == "lp":
                         # deterministic: one solve, replicated over seeds
                         m = evaluate_lp_cell(ctx, token)

@@ -12,6 +12,8 @@ from repro.core.policies import baseline_vllm, gate_and_route
 from repro.core.simulator import CTMCSimulator
 from repro.core.types import Pricing, ServicePrimitives, WorkloadClass
 
+pytestmark = pytest.mark.sim
+
 CLASSES = [
     WorkloadClass("decode_heavy", 300, 1000, arrival_rate=0.5, patience=0.1),
     WorkloadClass("prefill_heavy", 3000, 400, arrival_rate=0.5, patience=0.1),

@@ -1,0 +1,249 @@
+"""JAX trace-replay engine: statistical equivalence to the Python
+per-server event loop (the semantics oracle), determinism, conservation
+laws, budget diagnostics, and the sweep evaluator integration."""
+
+import numpy as np
+import pytest
+
+from repro.core.planning import SLISpec, solve_bundled_lp
+from repro.core.policies import (baseline_distserve, baseline_sarathi,
+                                 baseline_vllm, gate_and_route,
+                                 sli_aware_policy)
+from repro.core.types import Pricing, ServicePrimitives, WorkloadClass
+from repro.data.traces import (TraceConfig, synth_azure_trace,
+                               tensorize_trace, trace_class_means)
+from repro.serving.engine_jax import ClusterEngineJAX
+from repro.serving.engine_sim import ClusterEngine, EngineConfig
+
+pytestmark = pytest.mark.sim
+
+PRIM = ServicePrimitives()
+PRICE = Pricing(0.1, 0.2)
+N = 10
+HORIZON = 40.0
+
+
+def _mk(seed=42, compression=0.08, horizon=HORIZON):
+    trace = synth_azure_trace(
+        TraceConfig(horizon=horizon, base_rate=2.0, compression=compression,
+                    seed=seed))
+    means = trace_class_means(trace, 2)
+    classes = [
+        WorkloadClass(nm, m[0], m[1], m[2] / N, patience=3e-4)
+        for nm, m in zip(("code", "conv"), means)
+    ]
+    plan = solve_bundled_lp(classes, PRIM, PRICE,
+                            sli=SLISpec(pin_zero_decode_queue=True))
+    return trace, classes, plan
+
+
+def _py(trace, classes, pol, horizon=HORIZON, **kw):
+    eng = ClusterEngine(classes, pol,
+                        EngineConfig(PRIM, PRICE, n_servers=N, seed=1, **kw))
+    return eng.run(trace, horizon=horizon).summary()
+
+
+def _jx(trace, classes, pol, horizon=HORIZON, seed=0, **kw):
+    eng = ClusterEngineJAX(classes, pol,
+                           EngineConfig(PRIM, PRICE, n_servers=N, **kw),
+                           trace, horizon=horizon)
+    return eng.run(seed)
+
+
+def _half_width(vals):
+    return 1.96 * np.std(vals, ddof=1) / np.sqrt(len(vals))
+
+
+@pytest.mark.parametrize("make_policy,kw", [
+    (gate_and_route, {}),
+    (baseline_vllm, {}),
+], ids=["gate_and_route", "vllm"])
+def test_statistical_equivalence(make_policy, kw):
+    """Mean revenue rate / completions / TTFT agree between the engines
+    within 2 CI half-widths over a batch of independent traces.  Both
+    engines are deterministic per trace under these policies, so the
+    per-trace gap is pure float-ordering drift and tightly bounded too."""
+    n_traces = 6
+    rev, comp, ttft = [], [], []
+    for s in range(n_traces):
+        trace, classes, plan = _mk(seed=100 + s)
+        m_py = _py(trace, classes, make_policy(plan), **kw)
+        m_jx = _jx(trace, classes, make_policy(plan), **kw)
+        assert m_jx["budget_exhausted"] == 0.0
+        assert m_py["arrivals"] == m_jx["arrivals"]
+        # per-trace: deterministic trajectories, small float drift only
+        assert m_jx["revenue_rate"] == pytest.approx(
+            m_py["revenue_rate"], rel=0.05)
+        assert m_jx["completions"] == pytest.approx(
+            m_py["completions"], rel=0.05, abs=3)
+        rev.append((m_py["revenue_rate"], m_jx["revenue_rate"]))
+        comp.append((m_py["completions"], m_jx["completions"]))
+        ttft.append((m_py["ttft_mean"], m_jx["ttft_mean"]))
+    for pairs in (rev, comp, ttft):
+        a = np.array([p[0] for p in pairs])
+        b = np.array([p[1] for p in pairs])
+        tol = 2.0 * (_half_width(a) + _half_width(b)) + 1e-9
+        assert abs(a.mean() - b.mean()) <= tol
+
+
+def test_equivalence_sarathi_distserve():
+    """The baseline family stays faithful too (single-trace spot check;
+    DistServe is bitwise-stable enough for a tight tolerance)."""
+    trace, classes, plan = _mk(seed=7)
+    m_py = _py(trace, classes, baseline_sarathi(plan), sarathi_budget=True)
+    m_jx = _jx(trace, classes, baseline_sarathi(plan), sarathi_budget=True)
+    assert m_jx["revenue_rate"] == pytest.approx(m_py["revenue_rate"],
+                                                 rel=0.05)
+    m_py = _py(trace, classes, baseline_distserve(plan, k=4))
+    m_jx = _jx(trace, classes, baseline_distserve(plan, k=4))
+    assert m_jx["revenue_rate"] == pytest.approx(m_py["revenue_rate"],
+                                                 rel=0.01)
+    assert m_jx["completions"] == pytest.approx(m_py["completions"], abs=2)
+
+
+def test_randomized_router_statistical():
+    """SLI-aware (randomized router) matches the Python engine across
+    replications within CI half-widths -- different PRNG streams, same
+    law."""
+    trace, classes, plan = _mk(seed=11)
+    pol = sli_aware_policy(plan, general=True)
+    reps = 8
+    r_py = []
+    for s in range(reps):
+        eng = ClusterEngine(classes, pol,
+                            EngineConfig(PRIM, PRICE, n_servers=N, seed=s))
+        r_py.append(eng.run(trace, horizon=HORIZON).revenue_rate())
+    jeng = ClusterEngineJAX(classes, pol,
+                            EngineConfig(PRIM, PRICE, n_servers=N),
+                            trace, horizon=HORIZON)
+    r_jx = [m["revenue_rate"] for m in jeng.run_batch(range(reps))]
+    tol = 2.0 * (_half_width(r_py) + _half_width(r_jx)) + 1e-9
+    assert abs(np.mean(r_py) - np.mean(r_jx)) <= tol
+
+
+def test_determinism_and_batch_consistency():
+    trace, classes, plan = _mk(seed=3, compression=0.3)
+    pol = sli_aware_policy(plan)  # randomized: seeds actually matter
+    jeng = ClusterEngineJAX(classes, pol,
+                            EngineConfig(PRIM, PRICE, n_servers=N),
+                            trace, horizon=HORIZON)
+    a = jeng.run_batch_raw([3, 4])
+    b = jeng.run_batch_raw([3, 4])
+    for k in a:
+        np.testing.assert_array_equal(np.asarray(a[k]), np.asarray(b[k]))
+    # single-run API agrees with the batched one
+    r0 = jeng.run(3)
+    assert r0["revenue_rate"] == pytest.approx(
+        float(np.asarray(a["rev"])[0]) / jeng.h_eff)
+
+
+def test_conservation_and_capacity():
+    """Every arrival ends the replay in exactly one lifecycle bucket and
+    per-server decode residency never exceeds the batch cap."""
+    trace, classes, plan = _mk(seed=5)
+    jeng = ClusterEngineJAX(classes, gate_and_route(plan),
+                            EngineConfig(PRIM, PRICE, n_servers=N),
+                            trace, horizon=HORIZON)
+    raw = {k: np.asarray(v) for k, v in jeng.run_raw(0).items()}
+    st = raw["st"]
+    arrived = int((st != 0).sum())
+    assert arrived == jeng.trace.valid[
+        jeng.trace.t <= jeng.h_eff].sum()
+    # all arrived requests are in a live or terminal state (codes 1..6)
+    assert np.isin(st[st != 0], [1, 2, 3, 4, 5, 6]).all()
+    # the slot arrays and the lifecycle array agree about residency
+    slots = raw["slot_rid"]
+    resident = slots[slots >= 0]
+    assert len(set(resident)) == resident.size  # no rid in two slots
+    assert (st[resident] == 4).all()
+    assert set(np.nonzero(st == 4)[0]) == set(resident)
+    # decode residency within caps; at most one prefill per server
+    assert slots.shape == (N, PRIM.batch_cap)
+    pf = raw["pf_rid"]
+    assert (pf[pf >= 0] < jeng.trace.R).all()
+    assert len(set(pf[pf >= 0])) == (pf >= 0).sum()
+    assert (st[pf[pf >= 0]] == 2).all()  # prefilling requests match
+
+
+def test_budget_exhaustion_detected():
+    """A max_steps cap below the hard bound is reported, never silent."""
+    trace, classes, plan = _mk(seed=5)
+    jeng = ClusterEngineJAX(classes, gate_and_route(plan),
+                            EngineConfig(PRIM, PRICE, n_servers=N),
+                            trace, horizon=HORIZON, max_steps=50)
+    m = jeng.run(0)
+    assert m["budget_exhausted"] == 1.0
+    assert m["t_end"] < jeng.h_eff
+    full = ClusterEngineJAX(classes, gate_and_route(plan),
+                            EngineConfig(PRIM, PRICE, n_servers=N),
+                            trace, horizon=HORIZON)
+    assert full.run(0)["budget_exhausted"] == 0.0
+
+
+def test_max_requests_cap_reported():
+    trace, classes, plan = _mk(seed=5)
+    jeng = ClusterEngineJAX(classes, gate_and_route(plan),
+                            EngineConfig(PRIM, PRICE, n_servers=N),
+                            trace, horizon=HORIZON,
+                            max_requests=len(trace) // 2)
+    assert jeng.trace.n_dropped == len(trace) - len(trace) // 2
+    assert jeng.run(0)["n_dropped"] == float(jeng.trace.n_dropped)
+
+
+def test_unsupported_features_rejected():
+    trace, classes, plan = _mk(seed=5)
+    with pytest.raises(ValueError, match="record"):
+        ClusterEngineJAX(classes, gate_and_route(plan),
+                         EngineConfig(PRIM, PRICE, n_servers=N,
+                                      record_queues_every=1.0),
+                         trace, horizon=HORIZON)
+
+
+def test_tensorized_trace_input_accepted():
+    """A pre-tensorized trace (shared across engines) works as input."""
+    trace, classes, plan = _mk(seed=5)
+    tt = tensorize_trace(trace)
+    a = ClusterEngineJAX(classes, gate_and_route(plan),
+                         EngineConfig(PRIM, PRICE, n_servers=N),
+                         tt, horizon=HORIZON).run(0)
+    b = ClusterEngineJAX(classes, gate_and_route(plan),
+                         EngineConfig(PRIM, PRICE, n_servers=N),
+                         trace, horizon=HORIZON).run(0)
+    assert a == b
+
+
+def test_sweep_evaluator_integration(tmp_path):
+    """The engine_jax evaluator fills the grid with schema-valid cells
+    and is deterministic across runs of the same spec."""
+    from repro.sweep import SweepSpec, run_sweep
+    from repro.sweep.run import default_mix
+
+    mix = default_mix("two_class")
+    mix = type(mix)(name=mix.name, classes=mix.classes,
+                    trace=dict(horizon=20.0, base_rate=1.0,
+                               compression=0.5))
+    spec = SweepSpec(name="t_ejax", evaluator="engine_jax",
+                     policies=("gate_and_route", "vllm"), n_servers=(4,),
+                     n_seeds=2, seed=5, mixes=(mix,),
+                     horizon=10.0, warmup=0.0)
+    res = run_sweep(spec)
+    assert len(res.cells) == spec.n_cells
+    m = res.cells[0].metrics
+    for key in ("revenue_rate", "completions", "ttft_p95",
+                "budget_exhausted", "t_end", "n_iters"):
+        assert key in m
+    assert m["budget_exhausted"] == 0.0
+    assert run_sweep(spec).fingerprint() == res.fingerprint()
+    res.save(tmp_path / "t_ejax_sweep.json")  # exercises validate_payload
+
+
+def test_record_every_rejected_by_evaluator():
+    from repro.sweep import SweepSpec, run_sweep
+    from repro.sweep.run import default_mix
+
+    spec = SweepSpec(name="t_rec", evaluator="engine_jax",
+                     policies=("gate_and_route",), n_servers=(4,),
+                     n_seeds=1, mixes=(default_mix("two_class"),),
+                     horizon=2.0, record_every=0.5)
+    with pytest.raises(ValueError, match="record"):
+        run_sweep(spec)

@@ -19,6 +19,8 @@ from repro.core.types import Pricing, ServicePrimitives, WorkloadClass
 from repro.data.traces import Request, TraceConfig, synth_azure_trace, trace_class_means
 from repro.serving.engine_sim import ClusterEngine, EngineConfig
 
+pytestmark = pytest.mark.sim
+
 PRIM = ServicePrimitives()
 PRICE = Pricing(0.1, 0.2)
 

@@ -9,6 +9,8 @@ from repro.core.policies import gate_and_route, sli_aware_policy
 from repro.core.simulator import CTMCSimulator
 from repro.core.types import Pricing, ServicePrimitives, WorkloadClass
 
+pytestmark = pytest.mark.sim
+
 C0 = WorkloadClass("decode_heavy", 300, 1000, arrival_rate=0.5, patience=0.1)
 C1 = WorkloadClass("prefill_heavy", 3000, 400, arrival_rate=0.5, patience=0.1)
 PRIM = ServicePrimitives()

@@ -1,6 +1,7 @@
 """Online controller + elasticity integration tests."""
 
 import numpy as np
+import pytest
 
 from repro.core.online import OnlineController, OnlineControllerConfig
 from repro.core.planning import solve_bundled_lp
@@ -8,6 +9,8 @@ from repro.core.policies import gate_and_route
 from repro.core.types import Pricing, ServicePrimitives, WorkloadClass
 from repro.data.traces import Request, TraceConfig, synth_azure_trace
 from repro.serving.engine_sim import ClusterEngine, EngineConfig
+
+pytestmark = pytest.mark.sim
 
 PRIM = ServicePrimitives()
 PRICING = Pricing()

@@ -13,6 +13,8 @@ from repro.sweep.evaluators import (MixContext, parse_policy_token,
                                     resolve_policy)
 from repro.sweep.run import default_mix
 
+pytestmark = pytest.mark.sim
+
 
 def small_spec(**kw) -> SweepSpec:
     base = dict(name="t", evaluator="ctmc",

@@ -1,0 +1,135 @@
+"""Property tests for trace tensorization + the shared trace validation.
+
+Hypothesis-driven: pad/unpad round-trip, arrival-order preservation, and
+cap accounting; plus deterministic tests for the validation path shared
+by ``synth_azure_trace`` and ``load_trace_csv``."""
+
+import numpy as np
+import pytest
+
+from repro.data.traces import (Request, TraceConfig, TraceValidationError,
+                               load_trace_csv, synth_azure_trace,
+                               tensorize_trace, untensorize_trace,
+                               validate_requests)
+
+hypothesis = pytest.importorskip(
+    "hypothesis")  # property tests need hypothesis; skip where absent
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+
+@st.composite
+def traces(draw, max_len=40):
+    """Valid request lists: sorted finite arrivals, positive P/D."""
+    n = draw(st.integers(0, max_len))
+    ts = sorted(draw(st.lists(
+        st.floats(0.0, 1e4, allow_nan=False, allow_infinity=False),
+        min_size=n, max_size=n)))
+    reqs = []
+    for k in range(n):
+        reqs.append(Request(
+            rid=k,
+            t_arrival=ts[k],
+            cls=draw(st.integers(0, 3)),
+            prompt_len=draw(st.integers(1, 5000)),
+            decode_len=draw(st.integers(1, 800)),
+            patience=draw(st.one_of(st.just(float("inf")),
+                                    st.floats(0.1, 100.0))),
+        ))
+    return reqs
+
+
+@settings(max_examples=60, deadline=None)
+@given(traces())
+def test_roundtrip(reqs):
+    """untensorize(tensorize(reqs)) recovers every field except the rid
+    labels, which are canonicalised to arrival order."""
+    tt = tensorize_trace(reqs)
+    back = untensorize_trace(tt)
+    assert len(back) == len(reqs)
+    for orig, rt in zip(reqs, back):
+        assert rt.t_arrival == orig.t_arrival
+        assert rt.cls == orig.cls
+        assert rt.prompt_len == orig.prompt_len
+        assert rt.decode_len == orig.decode_len
+        assert rt.patience == orig.patience
+    # canonical ids: arange in arrival order
+    assert [r.rid for r in back] == list(range(len(reqs)))
+
+
+@settings(max_examples=60, deadline=None)
+@given(traces(), st.integers(0, 30))
+def test_padding_and_order(reqs, extra_pad):
+    """Padding never reorders arrivals or leaks into the valid region."""
+    tt = tensorize_trace(reqs, pad_to=len(reqs) + extra_pad)
+    assert tt.R == len(reqs) + extra_pad
+    assert tt.n_real == len(reqs)
+    assert tt.valid.sum() == len(reqs)
+    assert not tt.valid[len(reqs):].any()
+    # arrival times are nondecreasing over the valid prefix and +inf after
+    assert (np.diff(tt.t[: len(reqs)]) >= 0).all()
+    assert np.isinf(tt.t[len(reqs):]).all()
+    assert (tt.P >= 1).all() and (tt.D >= 1).all()
+
+
+@settings(max_examples=60, deadline=None)
+@given(traces(), st.integers(1, 20))
+def test_max_requests_cap(reqs, cap):
+    """The cap keeps the earliest arrivals and reports the overflow."""
+    tt = tensorize_trace(reqs, max_requests=cap)
+    kept = min(len(reqs), cap)
+    assert tt.n_real == kept
+    assert tt.n_dropped == max(0, len(reqs) - cap)
+    np.testing.assert_allclose(
+        tt.t[:kept], [r.t_arrival for r in reqs[:kept]])
+
+
+def test_pad_to_too_small_rejected():
+    reqs = [Request(0, 0.0, 0, 10, 5), Request(1, 1.0, 0, 10, 5)]
+    with pytest.raises(TraceValidationError, match="pad_to"):
+        tensorize_trace(reqs, pad_to=1)
+
+
+# ---------------------------------------------------------------------------
+# Shared validation path (synth + CSV + tensorize)
+# ---------------------------------------------------------------------------
+
+
+def test_validate_rejects_nonmonotone():
+    reqs = [Request(0, 5.0, 0, 10, 5), Request(1, 1.0, 0, 10, 5)]
+    with pytest.raises(TraceValidationError, match="nondecreasing"):
+        validate_requests(reqs)
+    with pytest.raises(TraceValidationError, match="nondecreasing"):
+        tensorize_trace(reqs)
+
+
+@pytest.mark.parametrize("bad,msg", [
+    (Request(0, float("nan"), 0, 10, 5), "non-finite"),
+    (Request(0, -1.0, 0, 10, 5), "non-finite or negative"),
+    (Request(0, 0.0, 0, 0, 5), "token lengths"),
+    (Request(0, 0.0, 0, 10, 0), "token lengths"),
+    (Request(0, 0.0, 0, 10, 5, patience=0.0), "patience"),
+    (Request(0, 0.0, -1, 10, 5), "negative"),
+])
+def test_validate_rejects_bad_fields(bad, msg):
+    with pytest.raises(TraceValidationError, match=msg):
+        validate_requests([bad])
+
+
+def test_synth_trace_passes_validation():
+    trace = synth_azure_trace(TraceConfig(horizon=5.0, compression=0.5))
+    validate_requests(trace)  # idempotent: synth already validates
+
+
+def test_csv_loader_validates(tmp_path):
+    good = tmp_path / "good.csv"
+    good.write_text("t,class,P,D\n0.5,code,100,10\n0.1,chat,50,5\n")
+    reqs = load_trace_csv(str(good))
+    assert [r.t_arrival for r in reqs] == [0.1, 0.5]  # sorted on load
+    bad = tmp_path / "bad.csv"
+    bad.write_text("t,class,P,D\n0.5,code,0,10\n")
+    with pytest.raises(TraceValidationError, match="token lengths"):
+        load_trace_csv(str(bad))
+    nan = tmp_path / "nan.csv"
+    nan.write_text("t,class,P,D\nnan,code,100,10\n")
+    with pytest.raises(TraceValidationError, match="non-finite"):
+        load_trace_csv(str(nan))

@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Docs health check: links must resolve, evaluator names must exist.
+"""Docs health check: links, evaluator names and benchmark modules.
 
 Scans the repo's markdown docs for inline links/images and verifies that
 relative targets exist on disk (external http(s)/mailto links are
@@ -9,9 +9,12 @@ docs mention -- ``--evaluator <name>`` CLI examples, ``"evaluator":
 "<name>"`` JSON snippets, and ``\\`name\\` evaluator`` / ``evaluator
 \\`name\\``` prose -- against the registry (``EVALUATORS`` in
 ``repro.sweep.spec``, the names dispatched to
-``repro.sweep.evaluators``), so documented evaluators cannot silently
-rot.  Exits nonzero with a listing of problems. Run from the repo root;
-CI runs this next to the tier-1 suite.
+``repro.sweep.evaluators``), and every ``bench_*`` module name
+``benchmarks/README.md`` mentions against the ``benchmarks/run.py``
+suite registry (same pattern as the evaluator check), so documented
+evaluators and benchmark scripts cannot silently rot.  Exits nonzero
+with a listing of problems. Run from the repo root; CI runs this next
+to the tier-1 suite.
 """
 
 from __future__ import annotations
@@ -68,6 +71,48 @@ def mentioned_evaluators(md: str):
     return names
 
 
+BENCH_RE = re.compile(r"\b(bench_\w+)\b")
+
+
+def known_benchmarks(root: Path):
+    """Benchmark modules the suite registry knows: parsed from the
+    ``benchmarks/run.py`` source (the imports + SUITE table), so the
+    check works without importing jax-heavy modules."""
+    run_py = root / "benchmarks" / "run.py"
+    if not run_py.exists():
+        return None, "benchmarks/run.py not found"
+    names = set(BENCH_RE.findall(run_py.read_text()))
+    return names, None
+
+
+def check_benchmarks(root: Path) -> list:
+    """Every bench_* mentioned in benchmarks/README.md must be in the
+    run.py registry and exist on disk (and vice versa: registry modules
+    should be documented)."""
+    errors = []
+    registry, err = known_benchmarks(root)
+    if err:
+        return [f"benchmark registry: {err}"]
+    readme = root / "benchmarks" / "README.md"
+    if not readme.exists():
+        return errors
+    mentioned = set(BENCH_RE.findall(readme.read_text()))
+    for name in sorted(mentioned - registry):
+        errors.append(
+            f"benchmarks/README.md: benchmark module {name!r} not in the "
+            f"benchmarks/run.py registry")
+    for name in sorted(mentioned):
+        if not (root / "benchmarks" / f"{name}.py").exists():
+            errors.append(
+                f"benchmarks/README.md: benchmark module {name!r} has no "
+                f"benchmarks/{name}.py on disk")
+    for name in sorted(registry - mentioned):
+        errors.append(
+            f"benchmarks/run.py: registered benchmark {name!r} is not "
+            f"documented in benchmarks/README.md")
+    return errors
+
+
 def check(root: Path) -> list:
     errors = []
     registry, reg_err = known_evaluators(root)
@@ -96,6 +141,7 @@ def check(root: Path) -> list:
                 errors.append(
                     f"{rel}: evaluator {name!r} not in repro.sweep "
                     f"registry {sorted(registry)}")
+    errors.extend(check_benchmarks(root))
     return errors
 
 
