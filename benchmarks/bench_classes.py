@@ -10,30 +10,22 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.data.traces import (ClassProfile, Request, TraceConfig,
-                               synth_azure_trace)
+from repro.data.traces import Request
+from repro.workloads import get_scenario
 
 from .common import fmt_table, run_trace_policy, save
 
 # The paper's premise (Fig EC.4): the native 'conversation' label mixes
-# requests with materially different prefill/decode profiles.  We generate
-# the trace from three latent profiles and give the scheduler only the
-# coarse native label (code vs conversation); k-means refinement should
-# recover the latent split.
-LATENT = TraceConfig(
-    horizon=300.0, compression=0.03, seed=42,
-    profiles=(
-        ClassProfile("code", mean_prompt=2048, mean_decode=36,
-                     cv_prompt=1.2, cv_decode=1.5, share=0.385),
-        ClassProfile("conv-chat", mean_prompt=200, mean_decode=900,
-                     cv_prompt=0.6, cv_decode=0.8, share=0.462),
-        ClassProfile("conv-analysis", mean_prompt=2600, mean_decode=30,
-                     cv_prompt=0.6, cv_decode=0.8, share=0.153),
-    ))
+# requests with materially different prefill/decode profiles.  The
+# three-latent-profile generator is the registry's `conv_latent`
+# scenario; the scheduler only sees the coarse native label (code vs
+# conversation) and k-means refinement should recover the latent split.
 # With this mixture the *fluid optimum itself* improves ~15% when the
 # planner sees the latent split (the blurred conv mean hides that analysis
 # is decode-cheap), so refinement has genuine planning value -- the paper's
 # EC.8.4 regime.
+LATENT_SCENARIO = "conv_latent"
+COMPRESSION = 0.03
 
 
 def _kmeans(X, k, iters=30, seed=0):
@@ -64,7 +56,8 @@ def refine_conversation(trace, k, seed=0):
 
 
 def run(quick: bool = True) -> dict:
-    latent = synth_azure_trace(LATENT)
+    scn = get_scenario(LATENT_SCENARIO)
+    latent = scn.generate(compression=COMPRESSION)
     # native coarse labels: both conv profiles -> class 1
     trace = [Request(r.rid, r.t_arrival, min(r.cls, 1), r.prompt_len,
                      r.decode_len, r.patience) for r in latent]
@@ -76,10 +69,11 @@ def run(quick: bool = True) -> dict:
         n_classes = 1 + k
         # safety rho=1.5: the paper's rho=3 rate inflation distorts the
         # admission mix under saturation once classes are fine-grained
-        # (measured: 5581 vs 7343 revenue at k=2) -- a finite-n finding
-        # about the online controller, recorded in EXPERIMENTS.md.
+        # (a ~25% revenue hit at k=2 when first measured, on the
+        # pre-registry trace realization) -- a finite-n finding about
+        # the online controller.
         s = run_trace_policy("gate_and_route", tr, n,
-                             horizon=LATENT.horizon, safety=1.5)
+                             horizon=scn.horizon, safety=1.5)
         rows.append({"conv_subclasses": k,
                      "n_classes": n_classes,
                      "revenue_rate": round(s["revenue_rate"], 1),

@@ -26,10 +26,10 @@ import numpy as np
 
 from repro.core.planning import solve_bundled_lp
 from repro.core.policies import gate_and_route
-from repro.data.traces import TraceConfig, synth_azure_trace
 from repro.serving.engine_jax import ClusterEngineJAX
 from repro.serving.engine_sim import ClusterEngine, EngineConfig
 from repro.sweep.evaluators import planner_classes_from_trace
+from repro.workloads import get_scenario
 
 from .common import PRICING, PRIM, fmt_table, save
 
@@ -40,13 +40,10 @@ def run(quick: bool = True) -> dict:
     import jax
 
     n = 10
-    tcfg = (TraceConfig(horizon=30.0, base_rate=2.0, compression=0.06,
-                        seed=42)
-            if quick else
-            TraceConfig(horizon=90.0, base_rate=2.0, compression=0.05,
-                        seed=42))
-    trace = synth_azure_trace(tcfg)
-    horizon = tcfg.horizon
+    # the registry's Azure 2023 marginals at bench sizing
+    horizon, compression = (30.0, 0.06) if quick else (90.0, 0.05)
+    trace = get_scenario("azure_2023").generate(
+        seed=42, horizon=horizon, compression=compression)
     classes = planner_classes_from_trace(trace, n)
     plan = solve_bundled_lp(classes, PRIM, PRICING)
     policy = gate_and_route(plan)

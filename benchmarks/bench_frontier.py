@@ -8,14 +8,16 @@ the benchmark star.  Moving left lowers TPOT at a revenue cost.
 from __future__ import annotations
 
 from repro.core.planning import SLISpec
-from repro.data.traces import synth_azure_trace
+from repro.workloads import get_scenario
 
-from .bench_trace_replay import TRACE_2023
+from .bench_trace_replay import COMPRESSION
 from .common import PRIM, fmt_table, round_vals, run_trace_policy, save
 
 
 def run(quick: bool = True) -> dict:
-    trace = synth_azure_trace(TRACE_2023)
+    scn = get_scenario("azure_2023")
+    trace = scn.generate(compression=COMPRESSION)
+    horizon = scn.horizon
     n = 10
     tau, gamma, B = PRIM.tau_mix, PRIM.gamma, PRIM.batch_cap
     lo = 1.0 / gamma            # solo-decode bound (paper: ~0.0089s)
@@ -27,7 +29,7 @@ def run(quick: bool = True) -> dict:
     for cap in caps:
         sli = SLISpec(tpot_cap=cap) if cap is not None else None
         s = run_trace_policy("gate_and_route", trace, n, sli=sli,
-                             horizon=TRACE_2023.horizon)
+                             horizon=horizon)
         rows.append(dict(round_vals(s), eta3=cap if cap else "none"))
     print(fmt_table(rows, ["eta3", "revenue_rate", "tpot_mean", "tpot_p95",
                            "completion_rate"],

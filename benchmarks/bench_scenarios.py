@@ -1,0 +1,92 @@
+"""Scenario-registry closed-loop benchmark.
+
+For every registered workload scenario (``repro.workloads``), replays
+the same generated trace under the closed-loop variants --
+online-adaptive gate-and-route (OnlineController replanning), the
+hindsight static plan, the frozen cold-start plan, and the vLLM-style
+heuristic -- and tables per-scenario revenue/latency/drop metrics.
+
+Headline check (the Section 6.2 claim): on the ``rate_shift`` scenario
+the closed loop must beat the *hindsight* static plan, not just the
+cold-start one.  The rate-shift comparison always runs at full scenario
+size so the artifact's headline number is quick/full invariant.
+
+Artifact: ``artifacts/bench/scenarios.json``.
+"""
+
+from __future__ import annotations
+
+from repro.workloads import (ClosedLoopConfig, compare_policies,
+                             get_scenario, list_scenarios)
+
+from .common import fmt_table, save
+
+COLS = ["scenario", "variant", "revenue_rate", "completion", "drops",
+        "ttft_p95", "tpot_p95", "replans"]
+
+# full-size closed loop on the controller's showcase scenario
+RATE_SHIFT_CFG = ClosedLoopConfig(n_servers=8, seed=0)
+
+
+def _rows_of(res: dict) -> list:
+    rows = []
+    for v, m in res["variants"].items():
+        rows.append({
+            "scenario": res["scenario"],
+            "variant": v,
+            "revenue_rate": round(m["revenue_rate"], 2),
+            "completion": round(m["completion_rate"], 3),
+            "drops": int(m["drops"]),
+            "ttft_p95": round(m["ttft_p95"], 2),
+            "tpot_p95": round(m["tpot_p95"], 4),
+            "replans": int(m["replans"]),
+        })
+    return rows
+
+
+def run(quick: bool = True) -> dict:
+    variants = (("adaptive", "static", "static_cold", "vllm")
+                if quick else
+                ("adaptive", "static", "static_cold", "vllm", "sarathi"))
+    results, rows = {}, []
+    for name in list_scenarios():
+        scn = get_scenario(name)
+        if name == "rate_shift":
+            cfg = RATE_SHIFT_CFG  # full size: the headline comparison
+        elif quick:
+            cfg = ClosedLoopConfig(
+                n_servers=6, seed=0, rate_scale=0.5,
+                horizon=min(scn.horizon, 120.0))
+        else:
+            cfg = ClosedLoopConfig(n_servers=8, seed=0)
+        res = compare_policies(scn, cfg, variants=variants)
+        results[name] = res
+        rows.extend(_rows_of(res))
+    print(fmt_table(rows, COLS,
+                    f"\n[scenarios] closed loop over "
+                    f"{len(results)} registered scenarios"))
+
+    shift = results["rate_shift"]
+    lead = shift["adaptive_lead_pct"]
+    beats = (shift["variants"]["adaptive"]["revenue_rate"]
+             > shift["variants"]["static"]["revenue_rate"])
+    print(f"[scenarios] rate_shift: adaptive vs hindsight-static "
+          f"{lead:+.1f}% revenue rate "
+          f"({'closed loop wins' if beats else 'NO WIN'})")
+    out = {
+        "scenarios": results,
+        "rows": rows,
+        "rate_shift_adaptive_lead_pct": lead,
+        "rate_shift_adaptive_beats_static": bool(beats),
+        "quick": bool(quick),
+    }
+    save("scenarios", out)
+    return out
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    run(quick=not ap.parse_args().full)

@@ -8,37 +8,33 @@ DistServe best-fixed-split comparators.
 
 from __future__ import annotations
 
-from repro.data.traces import ClassProfile, TraceConfig, synth_azure_trace
+from repro.workloads import get_scenario
 
 from .common import (best_fixed_split, fmt_table, round_vals,
                      run_trace_policy, save)
 
-TRACE_2023 = TraceConfig(horizon=300.0, compression=0.03, seed=42)
-# the 2024 slice: heavier conversation share, longer outputs
-TRACE_2024 = TraceConfig(
-    horizon=300.0, compression=0.03, seed=24,
-    profiles=(
-        ClassProfile("code", mean_prompt=3200, mean_decode=25,
-                     cv_prompt=1.1, cv_decode=1.3, share=0.35),
-        ClassProfile("conversation", mean_prompt=810, mean_decode=320,
-                     cv_prompt=1.5, cv_decode=1.2, share=0.65),
-    ))
+# The two Azure-like slices are registry scenarios now (the marginals
+# previously lived here as hand-rolled TraceConfig blocks); replay keeps
+# the classic compression and seeds.
+COMPRESSION = 0.03
 
 COLS = ["policy", "revenue_rate", "completion_rate", "ttft_mean", "ttft_p95",
         "ttft_p99", "tpot_mean", "tpot_p95", "tpot_p99"]
 
 
-def _one_replay(tag: str, tcfg: TraceConfig, n: int, quick: bool,
+def _one_replay(tag: str, scenario: str, n: int, quick: bool,
                 engine: str = "python") -> list:
-    trace = synth_azure_trace(tcfg)
+    scn = get_scenario(scenario)
+    trace = scn.generate(compression=COMPRESSION)
+    horizon = scn.horizon
     rows = []
     for pol in ("gate_and_route", "sarathi", "vllm"):
-        s = run_trace_policy(pol, trace, n, horizon=tcfg.horizon,
+        s = run_trace_policy(pol, trace, n, horizon=horizon,
                              engine=engine)
         rows.append(dict(round_vals(s), policy=pol))
     ks = ([2, 4, 6] if quick else range(1, n))
     for variant in ("mix_solo", "prefill_solo"):
-        s = best_fixed_split(variant, trace, n, ks=ks, horizon=tcfg.horizon,
+        s = best_fixed_split(variant, trace, n, ks=ks, horizon=horizon,
                              engine=engine)
         rows.append(dict(round_vals(s), policy=f"distserve_{variant}"))
     print(fmt_table(rows, COLS,
@@ -58,9 +54,9 @@ def run(quick: bool = True, engine: str = "python") -> dict:
     comparable within the table, not with the python-engine artifact."""
     n = 10
     out = {
-        "azure2023": _one_replay("2023 Azure-like replay", TRACE_2023, n,
+        "azure2023": _one_replay("2023 Azure-like replay", "azure_2023", n,
                                  quick, engine),
-        "azure2024": _one_replay("2024 Azure-like replay", TRACE_2024, n,
+        "azure2024": _one_replay("2024 Azure-like replay", "azure_2024", n,
                                  quick, engine),
     }
     # headline check: ours leads on revenue in both slices

@@ -14,8 +14,8 @@ import traceback
 from . import (bench_ablations, bench_calibration, bench_charging,
                bench_classes, bench_convergence, bench_ctmc_speed,
                bench_engine_speed, bench_frontier, bench_matched,
-               bench_roofline, bench_scale_sweep, bench_sensitivity,
-               bench_sli_pareto, bench_trace_replay)
+               bench_roofline, bench_scale_sweep, bench_scenarios,
+               bench_sensitivity, bench_sli_pareto, bench_trace_replay)
 from .common import ART
 
 
@@ -45,6 +45,7 @@ SUITE = [
     ("matched", bench_matched),                # EC.8.2
     ("scale_sweep", bench_scale_sweep),        # EC.8.3
     ("classes", bench_classes),                # EC.8.4
+    ("scenarios", bench_scenarios),            # workload registry closed loop
     ("convergence", bench_convergence),        # EC.8.5
     ("ctmc_speed", bench_ctmc_speed),          # uniformized engine micro-bench
     ("engine_speed", bench_engine_speed),      # trace-replay engine micro-bench

@@ -74,6 +74,10 @@ class OnlineController:
         w_eff = min(cfg.window, max(t, cfg.eps))
         lo = t - cfg.window
         lam = np.empty(self.I)
+        # a fully-failed cluster (n == 0, e.g. a capacity script killing
+        # every server) still replans: normalize per surviving server,
+        # or per single server while none survive
+        denom = max(self.n, 1) * w_eff
         for i in range(self.I):
             ts = self._arrivals[i]
             # drop old events (amortised)
@@ -82,7 +86,7 @@ class OnlineController:
                 k += 1
             if k:
                 del ts[:k]
-            lam[i] = max(cfg.safety * len(ts) / (self.n * w_eff), cfg.lam_min)
+            lam[i] = max(cfg.safety * len(ts) / denom, cfg.lam_min)
         return lam
 
     def replan(self, t: float) -> PlanSolution:

@@ -20,10 +20,11 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-__all__ = ["Request", "TraceConfig", "TraceValidationError", "TraceTensors",
-           "synth_azure_trace", "load_trace_csv", "validate_requests",
-           "tensorize_trace", "untensorize_trace",
-           "dolly_classes", "DOLLY_STATS"]
+__all__ = ["Request", "ClassProfile", "TraceConfig", "TraceValidationError",
+           "TraceTensors", "synth_azure_trace", "load_trace_csv",
+           "validate_requests", "tensorize_trace", "untensorize_trace",
+           "dolly_classes", "DOLLY_STATS", "trace_class_means",
+           "trace_class_means_windowed"]
 
 
 class TraceValidationError(ValueError):
@@ -42,12 +43,21 @@ class Request:
 
 @dataclass(frozen=True)
 class ClassProfile:
+    """Marginal statistics of one synthetic request class.
+
+    ``patience`` is the absolute per-request deadline in seconds
+    (:attr:`Request.patience`; ``inf`` = never expires), mirroring the
+    ``patience`` argument of :func:`dolly_classes` so synthetic traces
+    can exercise the SLI/expiry paths too.
+    """
+
     name: str
     mean_prompt: float
     mean_decode: float
     cv_prompt: float = 1.0  # lognormal coefficient of variation
     cv_decode: float = 1.0
     share: float = 0.5  # fraction of traffic
+    patience: float = float("inf")  # per-request deadline (seconds)
 
 
 #: Published task-category means from the Dolly-15k table (paper Table EC.4).
@@ -86,6 +96,18 @@ def _lognormal(rng, mean, cv, size=None):
     sigma2 = np.log(1 + cv * cv)
     mu = np.log(mean) - sigma2 / 2
     return rng.lognormal(mu, np.sqrt(sigma2), size=size)
+
+
+def sample_lengths(rng, profile: ClassProfile) -> tuple:
+    """Draw one (P, D) pair from a profile's lognormal marginals.
+
+    Shared by :func:`synth_azure_trace` and the scenario generators in
+    :mod:`repro.workloads`; the floors (8 prompt / 2 decode tokens) keep
+    degenerate draws out of the engines.
+    """
+    P = max(8, int(_lognormal(rng, profile.mean_prompt, profile.cv_prompt)))
+    D = max(2, int(_lognormal(rng, profile.mean_decode, profile.cv_decode)))
+    return P, D
 
 
 def validate_requests(reqs: Sequence[Request],
@@ -148,9 +170,9 @@ def synth_azure_trace(cfg: TraceConfig = TraceConfig()) -> list[Request]:
         t += dt
         i = int(rng.choice(len(cfg.profiles), p=shares))
         p = cfg.profiles[i]
-        P = max(8, int(_lognormal(rng, p.mean_prompt, p.cv_prompt)))
-        D = max(2, int(_lognormal(rng, p.mean_decode, p.cv_decode)))
-        reqs.append(Request(rid, t * cfg.compression, i, P, D))
+        P, D = sample_lengths(rng, p)
+        reqs.append(Request(rid, t * cfg.compression, i, P, D,
+                            patience=p.patience))
         rid += 1
     validate_requests(reqs, source="synth_azure_trace")
     return reqs
@@ -158,7 +180,9 @@ def synth_azure_trace(cfg: TraceConfig = TraceConfig()) -> list[Request]:
 
 def load_trace_csv(path: str, compression: float = 1.0,
                    class_names: Optional[Sequence[str]] = None) -> list[Request]:
-    """Replay a real trace CSV with columns (t, class, P, D)."""
+    """Replay a real trace CSV with columns (t, class, P, D) and an
+    optional ``patience`` column (deadline seconds; absent/empty =
+    ``inf``, matching the ``repro.workloads`` CSV export)."""
     out: list[Request] = []
     name_to_idx: dict[str, int] = (
         {n: k for k, n in enumerate(class_names)} if class_names else {}
@@ -176,6 +200,7 @@ def load_trace_csv(path: str, compression: float = 1.0,
                     cls,
                     int(float(row["P"])),
                     int(float(row["D"])),
+                    patience=float(row.get("patience") or "inf"),
                 )
             )
     out.sort(key=lambda r: r.t_arrival)
@@ -302,4 +327,46 @@ def trace_class_means(reqs: Sequence[Request], n_classes: int):
                 len(sub) / horizon,
             )
         )
+    return out
+
+
+def trace_class_means_windowed(reqs: Sequence[Request], n_classes: int,
+                               window: float):
+    """Per-window empirical class statistics of a (nonstationary) trace.
+
+    Splits ``[0, max arrival]`` into consecutive windows of ``window``
+    seconds and returns ``[(t0, t1, means), ...]`` where ``means`` has
+    the :func:`trace_class_means` layout ``[(mean P, mean D, rate/sec)]``
+    computed from the arrivals inside ``[t0, t1)``.  The final window's
+    rate is normalized by its *covered* duration (up to the last
+    arrival), not the nominal window length, so a trace whose horizon
+    is not a multiple of ``window`` does not show a spurious rate drop
+    in the last row.  This is the ground-truth counterpart of the
+    online controller's rolling-window estimator (Eq. 50): plotting the
+    two against each other shows how fast the controller tracks a rate
+    shift (see ``examples/online_adaptive.py``).
+    """
+    if window <= 0:
+        raise ValueError("window must be positive")
+    horizon = max((r.t_arrival for r in reqs), default=0.0)
+    n_win = max(1, int(np.ceil(horizon / window))) if horizon > 0 else 1
+    out = []
+    for w in range(n_win):
+        t0, t1 = w * window, (w + 1) * window
+        covered = max(min(t1, horizon) - t0, 1e-9)
+        sub = [r for r in reqs if t0 <= r.t_arrival < t1]
+        means = []
+        for i in range(n_classes):
+            cls_sub = [r for r in sub if r.cls == i]
+            if not cls_sub:
+                means.append((1.0, 1.0, 0.0))
+                continue
+            means.append(
+                (
+                    float(np.mean([r.prompt_len for r in cls_sub])),
+                    float(np.mean([r.decode_len for r in cls_sub])),
+                    len(cls_sub) / covered,
+                )
+            )
+        out.append((t0, t1, means))
     return out

@@ -98,15 +98,31 @@ class MixContext:
 
         ``compression_per_server`` in the mix's trace overrides resolves to
         ``compression = value / n`` so per-server offered load stays fixed
-        while the cluster grows (the EC.8.3 protocol)."""
+        while the cluster grows (the EC.8.3 protocol).  A mix with a
+        ``scenario`` name generates from the workload-scenario registry
+        (:func:`repro.workloads.get_scenario`) instead of the raw
+        ``TraceConfig``; the same overrides apply (narrowed to
+        :meth:`Scenario.generate`'s knobs)."""
         if n not in self._traces:
-            from repro.data.traces import TraceConfig, synth_azure_trace
-
             kw = dict(self.mix.trace)
             cps = kw.pop("compression_per_server", None)
             if cps is not None:
                 kw["compression"] = float(cps) / n
-            self._traces[n] = synth_azure_trace(TraceConfig(**kw))
+            if self.mix.scenario:
+                from repro.workloads import get_scenario
+
+                allowed = {"seed", "horizon", "compression", "rate_scale"}
+                bad = set(kw) - allowed
+                if bad:
+                    raise ValueError(
+                        f"mix {self.mix.name!r}: trace overrides {sorted(bad)} "
+                        f"not supported with scenario={self.mix.scenario!r} "
+                        f"(allowed: {sorted(allowed)})")
+                self._traces[n] = get_scenario(self.mix.scenario).generate(**kw)
+            else:
+                from repro.data.traces import TraceConfig, synth_azure_trace
+
+                self._traces[n] = synth_azure_trace(TraceConfig(**kw))
         return self._traces[n]
 
     def trace_classes(self, n: int):

@@ -67,7 +67,7 @@ def build_spec(args) -> SweepSpec:
         return SweepSpec(
             name=args.name or "smoke", evaluator="ctmc",
             policies=("gate_and_route",), n_servers=(20,), n_seeds=1,
-            seed=args.seed, mixes=(default_mix(args.mix),),
+            seed=args.seed, mixes=(default_mix(args.mix or "two_class"),),
             horizon=5.0, warmup=1.0)
     policies = _csv(args.policies)
     ns = tuple(int(n) for n in _csv(args.ns))
@@ -77,10 +77,36 @@ def build_spec(args) -> SweepSpec:
         ns = ns[:2]
         n_seeds = min(n_seeds, 2)
         horizon, warmup = min(horizon, 40.0), min(warmup, 10.0)
+    mixes = (default_mix(args.mix or "two_class"),)
+    if args.scenarios:
+        # scenario axis: one mix per registered workload scenario; only
+        # the trace-driven evaluators generate from scenarios
+        if args.mix is not None:
+            raise SystemExit("--scenarios and --mix are mutually exclusive "
+                             "(each scenario becomes its own mix)")
+        if args.evaluator not in ("engine", "engine_jax"):
+            raise SystemExit(
+                "--scenarios needs a trace-driven evaluator "
+                "(--evaluator engine or engine_jax)")
+        from repro.workloads import get_scenario
+
+        names = _csv(args.scenarios)
+        overrides = {}
+        if args.rate_scale != 1.0:
+            overrides["rate_scale"] = args.rate_scale
+        mixes = tuple(
+            MixSpec(
+                name=name, scenario=name,
+                # only spec.horizon is replayed: don't generate (and, for
+                # engine_jax, tensorize) arrivals past it
+                trace=dict(
+                    overrides,
+                    horizon=min(horizon, get_scenario(name).horizon)))
+            for name in names)
     return SweepSpec(
         name=args.name or "sweep", evaluator=args.evaluator,
         policies=policies, n_servers=ns, n_seeds=n_seeds, seed=args.seed,
-        mixes=(default_mix(args.mix),), horizon=horizon, warmup=warmup)
+        mixes=mixes, horizon=horizon, warmup=warmup)
 
 
 def summarize(result: SweepResult) -> str:
@@ -128,8 +154,17 @@ def main(argv=None) -> int:
     ap.add_argument("--evaluator", default="ctmc",
                     choices=("ctmc", "ctmc_jax", "fluid", "lp", "engine",
                              "engine_jax"))
-    ap.add_argument("--mix", default="two_class", choices=sorted(MIX_PRESETS),
-                    help="workload-mix preset")
+    ap.add_argument("--mix", default=None, choices=sorted(MIX_PRESETS),
+                    help="workload-mix preset (default two_class; "
+                         "mutually exclusive with --scenarios)")
+    ap.add_argument("--scenarios", default=None,
+                    help="comma-separated workload-scenario names (the "
+                         "scenario axis: one mix per name; engine/"
+                         "engine_jax evaluators only; see python -m "
+                         "repro.workloads.run --list)")
+    ap.add_argument("--rate-scale", type=float, default=1.0,
+                    help="scenario arrival-intensity multiplier "
+                         "(with --scenarios)")
     ap.add_argument("--horizon", type=float, default=90.0)
     ap.add_argument("--warmup", type=float, default=30.0)
     ap.add_argument("--name", default=None, help="sweep/artifact name")

@@ -57,6 +57,15 @@ class MixSpec:
     :class:`repro.data.traces.TraceConfig` fields and additionally accepts
     ``compression_per_server`` (compression is then ``value / n``, keeping
     per-server offered load constant across cluster sizes).
+
+    ``scenario`` names a registered workload scenario
+    (:func:`repro.workloads.get_scenario`); when set, the trace-driven
+    evaluators (``engine`` / ``engine_jax``) generate the trace from the
+    scenario instead of the raw ``TraceConfig``, and ``trace`` overrides
+    narrow to the :meth:`Scenario.generate` knobs (``seed``,
+    ``horizon``, ``compression`` / ``compression_per_server``,
+    ``rate_scale``).  This is the sweep's *scenario axis*: one mix per
+    scenario name (``python -m repro.sweep.run --scenarios ...``).
     """
 
     name: str = "default"
@@ -64,6 +73,7 @@ class MixSpec:
     prim: dict = field(default_factory=dict)
     pricing: dict = field(default_factory=dict)
     trace: dict = field(default_factory=dict)
+    scenario: str = ""
 
     def workload_classes(self) -> tuple:
         return tuple(WorkloadClass(**dict(c)) for c in self.classes)
@@ -81,6 +91,7 @@ class MixSpec:
             "prim": dict(self.prim),
             "pricing": dict(self.pricing),
             "trace": dict(self.trace),
+            "scenario": self.scenario,
         }
 
     @classmethod
@@ -91,6 +102,7 @@ class MixSpec:
             prim=dict(d.get("prim", {})),
             pricing=dict(d.get("pricing", {})),
             trace=dict(d.get("trace", {})),
+            scenario=d.get("scenario", ""),
         )
 
 

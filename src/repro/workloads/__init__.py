@@ -1,0 +1,45 @@
+"""Nonstationary workload scenarios + the closed-loop control harness.
+
+Layers:
+
+* :mod:`repro.workloads.arrivals` -- arrival processes (Poisson,
+  k-regime MMPP, piecewise-constant rate-shift / flash-crowd / diurnal).
+* :mod:`repro.workloads.scenarios` -- the declarative :class:`Scenario`
+  spec, capacity-event scripts, and the registry of built-ins
+  (:func:`get_scenario` / :func:`list_scenarios`).
+* :mod:`repro.workloads.batch` -- vmapped (seeds x scenarios) JAX trace
+  generation for sweep-scale runs (imported lazily: needs jax).
+* :mod:`repro.workloads.closed_loop` -- OnlineController wired into the
+  engine replay, compared against static/heuristic baselines.
+
+CLI: ``python -m repro.workloads.run`` (catalog listing, generation
+stats, closed-loop comparisons).  See ``docs/WORKLOADS.md``.
+"""
+
+from .arrivals import (ArrivalProcess, MMPPArrivals,
+                       PiecewiseConstantArrivals, PoissonArrivals, diurnal,
+                       flash_crowd, rate_shift)
+from .closed_loop import (VARIANTS, ClosedLoopConfig, compare_policies,
+                          run_closed_loop)
+from .scenarios import (CapacityEvent, Scenario, ScenarioError, get_scenario,
+                        list_scenarios, register_scenario)
+
+__all__ = [
+    "ArrivalProcess",
+    "PoissonArrivals",
+    "MMPPArrivals",
+    "PiecewiseConstantArrivals",
+    "rate_shift",
+    "flash_crowd",
+    "diurnal",
+    "CapacityEvent",
+    "Scenario",
+    "ScenarioError",
+    "register_scenario",
+    "get_scenario",
+    "list_scenarios",
+    "ClosedLoopConfig",
+    "VARIANTS",
+    "run_closed_loop",
+    "compare_policies",
+]

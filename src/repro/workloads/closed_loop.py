@@ -1,0 +1,200 @@
+"""Closed-loop adaptive control on workload scenarios.
+
+This is the harness the ISSUE's control story was missing: it wires
+:class:`repro.core.online.OnlineController` into the per-server
+:class:`repro.serving.engine_sim.ClusterEngine` replay of any registered
+scenario -- the engine feeds every arrival to the controller, the
+controller re-estimates class rates on a rolling window (Eq. 50),
+re-solves the planning LP at control epochs, and publishes the new
+occupancy/queue targets and mixed-server count M* (Eq. 51) back into the
+running gate-and-route policy; scenario capacity events additionally
+drive ``OnlineController.set_capacity`` replans through the engine's
+failure hooks.
+
+Variants (same trace, same engine seed -- paired comparisons):
+
+* ``adaptive``    -- gate-and-route, cold-start plan, online replanning.
+* ``static``      -- gate-and-route on the *hindsight* static plan
+                     (full-trace empirical means; the strongest static
+                     baseline).
+* ``static_cold`` -- gate-and-route frozen on the cold-start plan (what
+                     a no-controller deployment actually runs after a
+                     regime shift).
+* ``vllm`` / ``sarathi`` -- the class-agnostic system heuristics.
+
+The cold-start plan is solved from the first ``cold_window`` seconds of
+the trace, i.e. exactly the information a deployment has at launch; on
+nonstationary scenarios (``rate_shift``, ``flash_crowd``, ``diurnal``)
+the adaptive variant's win over the frozen plans is the paper's
+Section 6.2 message.  ``benchmarks/bench_scenarios.py`` tables these
+comparisons over the whole registry.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional, Sequence
+
+from repro.core.online import OnlineController, OnlineControllerConfig
+from repro.core.planning import solve_bundled_lp
+from repro.core.policies import (baseline_sarathi, baseline_vllm,
+                                 gate_and_route)
+from repro.core.types import Pricing, ServicePrimitives, WorkloadClass
+from repro.data.traces import trace_class_means, trace_class_means_windowed
+from repro.serving.engine_sim import ClusterEngine, EngineConfig
+
+from .scenarios import Scenario, get_scenario
+
+__all__ = ["ClosedLoopConfig", "VARIANTS", "run_closed_loop",
+           "compare_policies"]
+
+VARIANTS = ("adaptive", "static", "static_cold", "vllm", "sarathi")
+
+
+@dataclass(frozen=True)
+class ClosedLoopConfig:
+    """Knobs of one closed-loop scenario replay."""
+
+    n_servers: int = 8
+    horizon: Optional[float] = None  # None = the scenario's own horizon
+    compression: float = 1.0
+    rate_scale: float = 1.0
+    seed: int = 0
+    # controller (Section 6.2)
+    replan_every: float = 10.0
+    window: float = 30.0
+    safety: float = 1.5
+    planner_theta: float = 3e-4
+    # planning inputs
+    cold_window: float = 30.0  # launch-time knowledge for cold-start plans
+    drain: bool = False
+
+    def controller_config(self) -> OnlineControllerConfig:
+        return OnlineControllerConfig(
+            window=self.window, safety=self.safety,
+            replan_every=self.replan_every,
+            planning_theta=self.planner_theta)
+
+
+def _classes_from_means(means, n: int, theta: float,
+                        names: Sequence[str]) -> list:
+    return [
+        WorkloadClass(names[i] if i < len(names) else f"class{i}",
+                      prompt_len=max(means[i][0], 1.0),
+                      decode_len=max(means[i][1], 1.0),
+                      arrival_rate=max(means[i][2] / n, 1e-6),
+                      patience=theta)
+        for i in range(len(means))
+    ]
+
+
+def _plans(scn: Scenario, trace, cfg: ClosedLoopConfig, prim, pricing):
+    """(cold classes, cold plan, hindsight classes, hindsight plan)."""
+    I, names = scn.n_classes, scn.class_names
+    n = cfg.n_servers
+    windows = trace_class_means_windowed(trace, I, cfg.cold_window)
+    cold_cls = _classes_from_means(windows[0][2], n, cfg.planner_theta, names)
+    full_cls = _classes_from_means(trace_class_means(trace, I), n,
+                                   cfg.planner_theta, names)
+    return (cold_cls, solve_bundled_lp(cold_cls, prim, pricing),
+            full_cls, solve_bundled_lp(full_cls, prim, pricing))
+
+
+def run_closed_loop(scenario, variant: str = "adaptive",
+                    cfg: ClosedLoopConfig = ClosedLoopConfig(),
+                    prim: Optional[ServicePrimitives] = None,
+                    pricing: Optional[Pricing] = None,
+                    trace=None, plans=None) -> dict:
+    """Replay one scenario under one variant; returns a flat metric dict.
+
+    ``scenario`` is a :class:`Scenario` or a registered name.  Pass a
+    pre-generated ``trace`` to share it across variants (what
+    :func:`compare_policies` does -- common random numbers); ``plans``
+    (a :func:`_plans` tuple for that trace) additionally skips the
+    per-variant LP re-solves, which depend only on trace + cfg."""
+    if isinstance(scenario, str):
+        scenario = get_scenario(scenario)
+    if variant not in VARIANTS:
+        raise ValueError(f"unknown variant {variant!r}; one of {VARIANTS}")
+    prim = prim or ServicePrimitives()
+    pricing = pricing or Pricing()
+    n = cfg.n_servers
+    if trace is None:
+        trace = scenario.generate(seed=cfg.seed, horizon=cfg.horizon,
+                                  compression=cfg.compression,
+                                  rate_scale=cfg.rate_scale)
+    horizon = float(cfg.horizon if cfg.horizon is not None
+                    else scenario.horizon)
+    cold_cls, cold_plan, full_cls, full_plan = (
+        plans if plans is not None
+        else _plans(scenario, trace, cfg, prim, pricing))
+
+    controller = None
+    if variant == "adaptive":
+        classes, policy = cold_cls, gate_and_route(cold_plan)
+        controller = OnlineController(cold_cls, prim, pricing, n=n,
+                                      config=cfg.controller_config())
+    elif variant == "static":
+        classes, policy = full_cls, gate_and_route(full_plan)
+    elif variant == "static_cold":
+        classes, policy = cold_cls, gate_and_route(cold_plan)
+    elif variant == "vllm":
+        classes, policy = full_cls, baseline_vllm(full_plan)
+    else:  # sarathi
+        classes, policy = full_cls, baseline_sarathi(full_plan)
+
+    ecfg = EngineConfig(prim, pricing, n, seed=cfg.seed,
+                        sarathi_budget=(variant == "sarathi"))
+    eng = ClusterEngine(classes, policy, ecfg, controller=controller)
+    m = eng.run(trace, horizon=horizon,
+                failure_events=scenario.failure_events(n),
+                drain=cfg.drain)
+    out = m.summary()
+    out["drops"] = float(m.abandons)  # expired/abandoned requests
+    out["drop_rate"] = (m.abandons / m.arrivals) if m.arrivals else 0.0
+    out["replans"] = float(controller.replan_count) if controller else 0.0
+    out["mixed_target_final"] = float(
+        controller.mixed_target() if controller
+        else policy.mixed_target(n))
+    return {k: float(v) for k, v in out.items()}
+
+
+def compare_policies(scenario, cfg: ClosedLoopConfig = ClosedLoopConfig(),
+                     variants: Sequence[str] = ("adaptive", "static",
+                                                "static_cold", "vllm"),
+                     prim: Optional[ServicePrimitives] = None,
+                     pricing: Optional[Pricing] = None) -> dict:
+    """All variants on ONE generated trace (paired by construction).
+
+    Returns ``{"scenario", "n", "horizon", "n_requests", "variants":
+    {name: metrics}, "adaptive_lead_pct": ...}`` where the lead is the
+    adaptive variant's revenue-rate advantage over the hindsight static
+    plan (positive = closed loop wins).
+    """
+    if isinstance(scenario, str):
+        scenario = get_scenario(scenario)
+    prim = prim or ServicePrimitives()
+    pricing = pricing or Pricing()
+    trace = scenario.generate(seed=cfg.seed, horizon=cfg.horizon,
+                              compression=cfg.compression,
+                              rate_scale=cfg.rate_scale)
+    plans = _plans(scenario, trace, cfg, prim, pricing)
+    res = {
+        v: run_closed_loop(scenario, v, cfg, prim=prim, pricing=pricing,
+                           trace=trace, plans=plans)
+        for v in variants
+    }
+    out = {
+        "scenario": scenario.name,
+        "n": cfg.n_servers,
+        "horizon": float(cfg.horizon if cfg.horizon is not None
+                         else scenario.horizon),
+        "n_requests": len(trace),
+        "variants": res,
+    }
+    if "adaptive" in res and "static" in res:
+        base = res["static"]["revenue_rate"]
+        out["adaptive_lead_pct"] = (
+            100.0 * (res["adaptive"]["revenue_rate"] - base)
+            / max(base, 1e-12))
+    return out

@@ -180,3 +180,68 @@ def test_cli_smoke(tmp_path):
     assert main(["--smoke", "--out", str(out)]) == 0
     loaded = SweepResult.load(out)
     assert loaded.cells and "revenue_rate" in loaded.cells[0].metrics
+
+
+# ---------------------------------------------------------------------------
+# Scenario axis (repro.workloads registry as the trace source)
+# ---------------------------------------------------------------------------
+
+
+def test_mixspec_scenario_round_trips():
+    mix = MixSpec(name="rate_shift", scenario="rate_shift",
+                  trace={"rate_scale": 0.5})
+    again = MixSpec.from_dict(mix.to_dict())
+    assert again == mix
+    # legacy payloads (no scenario key) still load
+    assert MixSpec.from_dict({"name": "m"}).scenario == ""
+
+
+def test_mixcontext_generates_from_scenario_registry():
+    from repro.workloads import get_scenario
+
+    mix = MixSpec(name="rate_shift", scenario="rate_shift",
+                  trace={"seed": 4, "horizon": 30.0, "rate_scale": 0.5})
+    ctx = MixContext(mix, small_spec(evaluator="engine", mixes=(mix,),
+                                     policies=("gate_and_route",)))
+    trace = ctx.trace(10)
+    direct = get_scenario("rate_shift").generate(seed=4, horizon=30.0,
+                                                 rate_scale=0.5)
+    assert [(r.t_arrival, r.cls) for r in trace] == \
+           [(r.t_arrival, r.cls) for r in direct]
+    assert ctx.trace(10) is trace  # cached per n
+
+
+def test_mixcontext_rejects_foreign_overrides_with_scenario():
+    mix = MixSpec(name="bad", scenario="rate_shift",
+                  trace={"base_rate": 3.0})
+    ctx = MixContext(mix, small_spec(evaluator="engine", mixes=(mix,),
+                                     policies=("gate_and_route",)))
+    with pytest.raises(ValueError, match="base_rate"):
+        ctx.trace(10)
+
+
+def test_scenario_axis_sweep_engine_jax(tmp_path):
+    """One tiny engine_jax sweep over two scenario mixes end to end."""
+    mixes = tuple(
+        MixSpec(name=s, scenario=s,
+                trace={"horizon": 15.0, "rate_scale": 0.4})
+        for s in ("rate_shift", "flash_crowd"))
+    spec = small_spec(evaluator="engine_jax", mixes=mixes,
+                      policies=("gate_and_route",), n_servers=(4,),
+                      n_seeds=1, horizon=15.0, warmup=0.0)
+    res = run_sweep(spec)
+    assert len(res.cells) == 2
+    for c in res.cells:
+        assert c.metrics["completions"] > 0
+        assert c.metrics["budget_exhausted"] == 0.0
+    path = tmp_path / "scen.json"
+    res.save(path)
+    validate_payload(json.loads(path.read_text()))
+
+
+def test_cli_scenarios_flag_requires_engine_evaluator(tmp_path):
+    from repro.sweep.run import main
+
+    with pytest.raises(SystemExit):
+        main(["--scenarios", "rate_shift", "--evaluator", "ctmc",
+              "--out", str(tmp_path / "x.json")])

@@ -1,0 +1,231 @@
+"""Workload-scenario subsystem: registry, generation, arrival processes.
+
+Deterministic coverage of the registry contract (>= 8 scenarios,
+validated generation, tensor round-trip), mix schedules, per-class
+patience, and capacity scripts; the hypothesis property tests for the
+new arrival processes live in ``test_workloads_properties.py`` so this
+module runs even where hypothesis is absent.
+"""
+
+import numpy as np
+import pytest
+
+from repro.data.traces import (ClassProfile, TraceConfig, synth_azure_trace,
+                               trace_class_means_windowed, untensorize_trace,
+                               validate_requests)
+from repro.workloads import (CapacityEvent, MMPPArrivals,
+                             PiecewiseConstantArrivals, PoissonArrivals,
+                             Scenario, ScenarioError, diurnal, flash_crowd,
+                             get_scenario, list_scenarios, rate_shift,
+                             register_scenario)
+
+
+# ---------------------------------------------------------------------------
+# Registry contract
+# ---------------------------------------------------------------------------
+
+
+def test_registry_has_catalog():
+    names = list_scenarios()
+    assert len(names) >= 8
+    assert names == sorted(names)
+    for required in ("azure_2023", "azure_2024", "rate_shift", "flash_crowd",
+                     "diurnal", "capacity_churn", "dolly_mix", "conv_latent"):
+        assert required in names
+
+
+def test_get_scenario_unknown_name():
+    with pytest.raises(ScenarioError, match="unknown scenario"):
+        get_scenario("no_such_scenario")
+
+
+def test_register_scenario_no_silent_shadowing():
+    s = get_scenario("azure_2023")
+    with pytest.raises(ScenarioError, match="already registered"):
+        register_scenario(s.replace(description="shadow"))
+
+
+@pytest.mark.parametrize("name", list_scenarios())
+def test_every_scenario_generates_and_roundtrips(name):
+    """Acceptance bar: every registered scenario emits a validated trace
+    that round-trips through tensorize_trace (quick-sized)."""
+    scn = get_scenario(name)
+    trace = scn.generate(seed=2, horizon=min(40.0, scn.horizon),
+                         rate_scale=0.5)
+    assert trace, f"{name} generated an empty quick trace"
+    validate_requests(trace)  # idempotent: generate already validates
+    tt = scn.tensorize(seed=2, horizon=min(40.0, scn.horizon),
+                       rate_scale=0.5, pad_to=len(trace) + 7)
+    back = untensorize_trace(tt)
+    assert len(back) == len(trace)
+    assert [r.cls for r in back] == [r.cls for r in trace]
+    assert tt.n_classes <= scn.n_classes
+    assert all(r.cls < scn.n_classes for r in trace)
+
+
+def test_generation_is_deterministic_and_seed_sensitive():
+    scn = get_scenario("rate_shift")
+    a = scn.generate(seed=5, horizon=60.0)
+    b = scn.generate(seed=5, horizon=60.0)
+    c = scn.generate(seed=6, horizon=60.0)
+    assert [(r.t_arrival, r.cls, r.prompt_len) for r in a] == \
+           [(r.t_arrival, r.cls, r.prompt_len) for r in b]
+    assert [r.t_arrival for r in a] != [r.t_arrival for r in c]
+
+
+def test_mix_schedule_shifts_composition():
+    scn = get_scenario("rate_shift")  # shares flip 0.8/0.2 -> 0.25/0.75
+    np.testing.assert_allclose(scn.shares_at(0.0), [0.8, 0.2])
+    np.testing.assert_allclose(scn.shares_at(200.0), [0.25, 0.75])
+    trace = scn.generate(seed=0)
+    pre = [r.cls for r in trace if r.t_arrival < 120.0]
+    post = [r.cls for r in trace if r.t_arrival >= 120.0]
+    assert np.mean(pre) < 0.35 and np.mean(post) > 0.6
+
+
+def test_capacity_events_script():
+    scn = get_scenario("capacity_churn")
+    evs = scn.failure_events(n=2)  # sids clamped into the tiny cluster
+    assert all(ev[2] < 2 for ev in evs)
+    kinds = {ev[1] for ev in evs}
+    assert kinds == {"fail", "recover", "straggle"}
+    assert all(len(ev) == 4 for ev in evs if ev[1] == "straggle")
+    with pytest.raises(ValueError, match="kind"):
+        CapacityEvent(1.0, "explode", 0)
+
+
+def test_expected_rates_average_mix_schedule():
+    scn = get_scenario("rate_shift")
+    rates = scn.expected_rates()
+    # total = time-averaged intensity; split reflects both phases
+    assert rates.sum() == pytest.approx(
+        scn.arrivals.mean_rate(scn.horizon), rel=1e-6)
+    assert rates[1] > rates[0] * 0.5  # conversation gains mass post-shift
+
+
+# ---------------------------------------------------------------------------
+# Per-class patience (synthetic traces can exercise expiry now)
+# ---------------------------------------------------------------------------
+
+
+def test_synth_azure_trace_per_class_patience():
+    cfg = TraceConfig(
+        horizon=5.0, compression=0.2,
+        profiles=(
+            ClassProfile("deadline", 100, 20, share=0.5, patience=7.5),
+            ClassProfile("lenient", 100, 20, share=0.5),
+        ))
+    trace = synth_azure_trace(cfg)
+    assert trace
+    for r in trace:
+        if r.cls == 0:
+            assert r.patience == 7.5
+        else:
+            assert np.isinf(r.patience)
+
+
+def test_scenario_patience_flows_to_requests():
+    trace = get_scenario("dolly_mix").generate(seed=0, horizon=20.0)
+    assert trace and all(np.isfinite(r.patience) for r in trace)
+
+
+def test_cli_csv_export_roundtrips(tmp_path):
+    """CLI --out CSV preserves class ids AND patience through
+    load_trace_csv (numeric ids; optional patience column)."""
+    from repro.data.traces import load_trace_csv
+    from repro.workloads.run import main
+
+    out = tmp_path / "t.csv"
+    assert main(["--scenario", "dolly_mix", "--stats", "--quick",
+                 "--seed", "3", "--out", str(out)]) == 0
+    scn = get_scenario("dolly_mix")
+    direct = scn.generate(seed=3, horizon=60.0, rate_scale=0.5)
+    back = load_trace_csv(str(out))
+    assert [(r.t_arrival, r.cls, r.prompt_len, r.decode_len, r.patience)
+            for r in back] == \
+           [(r.t_arrival, r.cls, r.prompt_len, r.decode_len, r.patience)
+            for r in direct]
+
+
+# ---------------------------------------------------------------------------
+# Windowed class means (online-controller ground truth)
+# ---------------------------------------------------------------------------
+
+
+def test_trace_class_means_windowed_matches_global():
+    trace = get_scenario("azure_2023").generate(seed=1, horizon=60.0,
+                                                rate_scale=2.0)
+    wins = trace_class_means_windowed(trace, 2, window=15.0)
+    assert len(wins) == 4
+    # windowed arrival counts must add up to the per-class totals; the
+    # last window normalizes by its covered duration (up to the final
+    # arrival), not the nominal window length
+    horizon = max(r.t_arrival for r in trace)
+    for i in range(2):
+        total = sum(m[i][2] * (min(t1, horizon) - t0)
+                    for t0, t1, m in wins)
+        assert total == pytest.approx(
+            sum(1 for r in trace if r.cls == i), rel=1e-6)
+    with pytest.raises(ValueError, match="window"):
+        trace_class_means_windowed(trace, 2, window=0.0)
+
+
+def test_trace_class_means_windowed_sees_rate_shift():
+    trace = get_scenario("rate_shift").generate(seed=3)
+    wins = trace_class_means_windowed(trace, 2, window=30.0)
+    pre = wins[1][2]  # [30, 60): phase 0
+    post = wins[-1][2]  # last window: phase 1
+    assert sum(m[2] for m in post) > 1.8 * sum(m[2] for m in pre)
+
+
+# ---------------------------------------------------------------------------
+# Arrival-process behaviour (deterministic; hypothesis properties live in
+# test_workloads_properties.py)
+# ---------------------------------------------------------------------------
+
+
+def test_mmpp_scaling_matches_compression_law():
+    """scaled(f) multiplies arrival AND switching rates -- same law as
+    TraceConfig interarrival compression (statistical check)."""
+    proc = MMPPArrivals(base_rate=2.0)
+    fast = proc.scaled(10.0)
+    assert fast.base_rate == 20.0
+    assert fast.switch == tuple(s * 10.0 for s in proc.switch)
+    counts = [len(fast.sample(np.random.default_rng(s), 100.0))
+              for s in range(8)]
+    expect = fast.mean_rate(100.0) * 100.0
+    assert abs(np.mean(counts) - expect) < 0.25 * expect
+
+
+def test_poisson_sample_statistics():
+    proc = PoissonArrivals(rate=12.0)
+    ts = proc.sample(np.random.default_rng(0), 200.0)
+    assert (np.diff(ts) > 0).all() and ts[-1] < 200.0
+    assert abs(len(ts) - 2400) < 4 * np.sqrt(2400)
+
+
+def test_builder_shapes():
+    rs = rate_shift(2.0, 6.0, t_shift=50.0)
+    assert rs.rate_at(0.0) == 2.0 and rs.rate_at(50.0) == 6.0
+    fc = flash_crowd(3.0, spike_mult=4.0, t_on=10.0, t_off=20.0)
+    assert fc.rate_at(15.0) == 12.0 and fc.rate_at(25.0) == 3.0
+    dn = diurnal(base_rate=10.0, amplitude=0.5, period=100.0, horizon=200.0,
+                 n_bins=10)
+    assert dn.rate_bound() <= 15.0 + 1e-9
+    assert min(dn.rates) >= 5.0 - 1e-9
+    assert dn.mean_rate(200.0) == pytest.approx(10.0, rel=0.05)
+
+
+def test_invalid_process_specs_rejected():
+    with pytest.raises(ValueError):
+        PoissonArrivals(rate=0.0)
+    with pytest.raises(ValueError):
+        MMPPArrivals(base_rate=1.0, levels=(1.0,), switch=(0.1,))
+    with pytest.raises(ValueError):
+        PiecewiseConstantArrivals(times=(0.0, 5.0), rates=(0.0, 0.0))
+    with pytest.raises(ValueError):
+        PiecewiseConstantArrivals(times=(1.0, 5.0), rates=(1.0, 2.0))
+    with pytest.raises(ValueError, match="mix_schedule"):
+        Scenario(name="bad", description="", arrivals=PoissonArrivals(1.0),
+                 profiles=(ClassProfile("a", 10, 10),),
+                 mix_schedule=((0.0, (0.5, 0.5)),))

@@ -1,0 +1,87 @@
+"""Vmapped (seeds x scenarios) JAX trace generation."""
+
+import numpy as np
+import pytest
+
+from repro.data.traces import validate_requests
+from repro.workloads import get_scenario
+from repro.workloads.batch import (batch_cell_requests, batch_cell_tensors,
+                                   generate_batch)
+
+pytestmark = pytest.mark.sim
+
+NAMES = ("rate_shift", "flash_crowd", "azure_2023", "dolly_mix")
+
+
+@pytest.fixture(scope="module")
+def batch():
+    scns = [get_scenario(n) for n in NAMES]
+    return generate_batch(scns, seeds=[0, 1, 2], horizon=90.0,
+                          rate_scale=0.5)
+
+
+def test_batch_shapes_and_budget(batch):
+    S, K, R = batch["t"].shape
+    assert (S, K) == (len(NAMES), 3)
+    assert R == batch["meta"]["R"]
+    assert batch["truncated"].sum() == 0  # candidate budget covered
+    assert (batch["n_real"] > 0).all()
+
+
+def test_batch_cells_are_valid_traces(batch):
+    for s in range(len(NAMES)):
+        scn = get_scenario(NAMES[s])
+        for k in range(3):
+            reqs = batch_cell_requests(batch, s, k)  # validates internally
+            validate_requests(reqs)
+            assert len(reqs) == int(batch["n_real"][s, k])
+            assert all(r.cls < scn.n_classes for r in reqs)
+            tt = batch_cell_tensors(batch, s, k)
+            assert tt.n_real == len(reqs)
+            assert np.isinf(tt.t[~tt.valid]).all()
+            assert (tt.P >= 1).all() and (tt.D >= 1).all()
+
+
+def test_batch_counts_match_rate_integral(batch):
+    """Mean accepted count ~= integral of the (scaled) intensity."""
+    for s, name in enumerate(NAMES):
+        proc = get_scenario(name).arrivals.scaled(0.5)
+        h = min(90.0, get_scenario(name).horizon)
+        expect = proc.mean_rate(h) * h
+        got = batch["n_real"][s].mean()
+        sigma = np.sqrt(expect)
+        assert abs(got - expect) < 6 * sigma, (name, got, expect)
+
+
+def test_batch_deterministic_and_seed_sensitive():
+    scns = [get_scenario("rate_shift")]
+    a = generate_batch(scns, seeds=[7], horizon=40.0)
+    b = generate_batch(scns, seeds=[7], horizon=40.0)
+    c = generate_batch(scns, seeds=[8], horizon=40.0)
+    np.testing.assert_array_equal(a["t"], b["t"])
+    np.testing.assert_array_equal(a["P"], b["P"])
+    assert not np.array_equal(a["t"], c["t"])
+
+
+def test_batch_patience_and_mix(batch):
+    # dolly_mix has finite per-class patience; azure does not
+    s_dolly = NAMES.index("dolly_mix")
+    s_azure = NAMES.index("azure_2023")
+    v = batch["valid"][s_dolly, 0]
+    assert np.isfinite(batch["patience"][s_dolly, 0][v]).all()
+    v = batch["valid"][s_azure, 0]
+    assert np.isinf(batch["patience"][s_azure, 0][v]).all()
+    # rate_shift mix flips: early arrivals mostly class 0
+    s_rs = NAMES.index("rate_shift")
+    t = batch["t"][s_rs, 0]
+    cls = batch["cls"][s_rs, 0]
+    v = batch["valid"][s_rs, 0]
+    early = cls[v & (t < 60.0)]
+    assert early.size and early.mean() < 0.4
+
+
+def test_batch_rejects_empty():
+    with pytest.raises(ValueError):
+        generate_batch([], seeds=[0])
+    with pytest.raises(ValueError):
+        generate_batch([get_scenario("rate_shift")], seeds=[])

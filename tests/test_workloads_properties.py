@@ -1,0 +1,91 @@
+"""Hypothesis property tests for the new arrival processes.
+
+Split from ``test_workloads.py`` so the deterministic scenario tests run
+where hypothesis is absent (same convention as the other property
+modules: importorskip at module scope).
+"""
+
+import numpy as np
+import pytest
+
+from repro.workloads import MMPPArrivals, PiecewiseConstantArrivals
+
+hypothesis = pytest.importorskip(
+    "hypothesis")  # property tests need hypothesis; skip where absent
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+
+@st.composite
+def piecewise_specs(draw):
+    n_seg = draw(st.integers(1, 6))
+    gaps = draw(st.lists(st.floats(1.0, 50.0), min_size=n_seg - 1,
+                         max_size=n_seg - 1))
+    times = tuple(np.concatenate([[0.0], np.cumsum(gaps)]))
+    rates = tuple(draw(st.lists(st.floats(0.0, 30.0), min_size=n_seg,
+                                max_size=n_seg)
+                       .filter(lambda rs: any(r > 0.5 for r in rs))))
+    return PiecewiseConstantArrivals(times=times, rates=rates)
+
+
+@settings(max_examples=40, deadline=None)
+@given(piecewise_specs(), st.integers(0, 2**31 - 1), st.floats(10.0, 200.0))
+def test_piecewise_sample_sorted_in_range(proc, seed, horizon):
+    ts = proc.sample(np.random.default_rng(seed), horizon)
+    assert (np.diff(ts) >= 0).all()
+    assert ((ts >= 0) & (ts < horizon)).all()
+    # no arrivals inside zero-rate segments
+    for j, r in enumerate(proc.rates):
+        if r == 0.0:
+            hi = proc.times[j + 1] if j + 1 < len(proc.times) else horizon
+            assert not ((ts >= proc.times[j]) & (ts < hi)).any()
+
+
+@settings(max_examples=40, deadline=None)
+@given(piecewise_specs(), st.floats(0.0, 300.0), st.floats(0.1, 8.0))
+def test_piecewise_rate_at_and_scaling(proc, t, factor):
+    j = max(0, np.searchsorted(np.asarray(proc.times), t, side="right") - 1)
+    assert proc.rate_at(t) == proc.rates[j]
+    scaled = proc.scaled(factor)
+    assert scaled.times == proc.times  # breakpoints stay authored
+    assert scaled.rate_at(t) == pytest.approx(factor * proc.rate_at(t))
+    assert scaled.mean_rate(100.0) == pytest.approx(
+        factor * proc.mean_rate(100.0))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 5), st.integers(0, 2**31 - 1))
+def test_mmpp_k_regimes_sample_properties(k, seed):
+    proc = MMPPArrivals(base_rate=5.0,
+                        levels=tuple(0.5 + i for i in range(k)),
+                        switch=tuple(1 / 10.0 for _ in range(k)))
+    ts = proc.sample(np.random.default_rng(seed), 50.0)
+    assert (np.diff(ts) > 0).all()
+    assert ((ts >= 0) & (ts < 50.0)).all()
+    assert proc.rate_bound() == pytest.approx(5.0 * (k - 0.5))
+    # stationary mean with equal holding times = plain average of levels
+    assert proc.mean_rate(50.0) == pytest.approx(
+        5.0 * np.mean([0.5 + i for i in range(k)]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.floats(20.0, 120.0),
+       st.floats(0.05, 0.95))
+def test_mix_schedule_shares_property(seed, horizon, share0):
+    """Scenario class draws follow the scheduled shares in every phase."""
+    from repro.data.traces import ClassProfile
+    from repro.workloads import PoissonArrivals, Scenario
+
+    scn = Scenario(
+        name="prop", description="",
+        profiles=(ClassProfile("a", 50, 10, share=share0),
+                  ClassProfile("b", 50, 10, share=1 - share0)),
+        arrivals=PoissonArrivals(rate=40.0),
+        horizon=horizon,
+        mix_schedule=((horizon / 2, (1 - share0, share0)),))
+    trace = scn.generate(seed=seed)
+    pre = [r.cls for r in trace if r.t_arrival < horizon / 2]
+    post = [r.cls for r in trace if r.t_arrival >= horizon / 2]
+    if len(pre) > 50:
+        assert abs(np.mean(pre) - (1 - share0)) < 0.2
+    if len(post) > 50:
+        assert abs(np.mean(post) - share0) < 0.2

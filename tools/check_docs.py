@@ -24,7 +24,8 @@ import sys
 from pathlib import Path
 
 DOCS = ("README.md", "docs/ARCHITECTURE.md", "docs/SIMULATORS.md",
-        "benchmarks/README.md", "ROADMAP.md", "CHANGES.md")
+        "docs/WORKLOADS.md", "benchmarks/README.md", "ROADMAP.md",
+        "CHANGES.md")
 
 LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
 
@@ -69,6 +70,50 @@ def mentioned_evaluators(md: str):
         for m in rx.finditer(md):
             names.update(p for p in m.group(1).split(",") if p)
     return names
+
+
+# how docs name workload scenarios (CLI flags, MixSpec JSON, backticked
+# prose, registry lookups) -- same idea as the evaluator patterns
+SCENARIO_RES = (
+    re.compile(r"--scenarios?[ =]+([a-z0-9_][a-z0-9_,]*)"),
+    re.compile(r"\"scenario\":\s*\"([a-z0-9_]+)\""),
+    re.compile(r"`([a-z0-9_]+)` scenario"),
+    re.compile(r"scenarios? `([a-z0-9_]+)`"),
+    re.compile(r"get_scenario\(\"([a-z0-9_]+)\"\)"),
+)
+
+
+def known_scenarios(root: Path):
+    """The workload-scenario registry, or an error string."""
+    sys.path.insert(0, str(root / "src"))
+    try:
+        from repro.workloads import list_scenarios
+        return set(list_scenarios()), None
+    except Exception as exc:  # missing dep / broken import = check error
+        return None, f"cannot import repro.workloads ({exc})"
+
+
+def mentioned_scenarios(md: str):
+    names = set()
+    for rx in SCENARIO_RES:
+        for m in rx.finditer(md):
+            names.update(p for p in m.group(1).split(",") if p)
+    return names
+
+
+def check_scenario_catalog(root: Path, registry) -> list:
+    """docs/WORKLOADS.md's catalog must cover every registered scenario
+    (the reverse of the mention check: registry entries cannot go
+    undocumented)."""
+    doc = root / "docs" / "WORKLOADS.md"
+    if registry is None or not doc.exists():
+        return []
+    ticked = set(re.findall(r"`([a-z0-9_]+)`", doc.read_text()))
+    return [
+        f"docs/WORKLOADS.md: registered scenario {name!r} is not "
+        f"documented in the catalog"
+        for name in sorted(registry - ticked)
+    ]
 
 
 BENCH_RE = re.compile(r"\b(bench_\w+)\b")
@@ -118,6 +163,9 @@ def check(root: Path) -> list:
     registry, reg_err = known_evaluators(root)
     if reg_err:
         errors.append(f"evaluator registry: {reg_err}")
+    scenarios, scn_err = known_scenarios(root)
+    if scn_err:
+        errors.append(f"scenario registry: {scn_err}")
     for rel in DOCS:
         doc = root / rel
         if not doc.exists():
@@ -141,6 +189,12 @@ def check(root: Path) -> list:
                 errors.append(
                     f"{rel}: evaluator {name!r} not in repro.sweep "
                     f"registry {sorted(registry)}")
+        if scenarios is not None:
+            for name in sorted(mentioned_scenarios(md) - scenarios):
+                errors.append(
+                    f"{rel}: scenario {name!r} not in the repro.workloads "
+                    f"registry {sorted(scenarios)}")
+    errors.extend(check_scenario_catalog(root, scenarios))
     errors.extend(check_benchmarks(root))
     return errors
 
