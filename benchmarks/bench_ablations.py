@@ -56,8 +56,10 @@ def run(quick: bool = True) -> dict:
         n_servers=(n,), n_seeds=1, seed=0, mixes=mixes,
         horizon=horizon, warmup=warmup,
         # paired comparison: every variant sees the same RNG streams, as
-        # the original single-seed loop did (variance-reduced ranking)
-        extra={"crn_policies": True})
+        # the original single-seed loop did (variance-reduced ranking);
+        # batch_plans solves all per-instance planning LPs in one
+        # vmapped interior-point run before the CTMC cells start
+        extra={"crn_policies": True, "batch_plans": True})
     res = run_sweep(spec)
     per_variant = {
         v: [res.mean_over_seeds("revenue_rate", mix=m.name, policy=v, n=n)

@@ -17,7 +17,8 @@ Artifact: ``artifacts/bench/scenarios.json``.
 from __future__ import annotations
 
 from repro.workloads import (ClosedLoopConfig, compare_policies,
-                             get_scenario, list_scenarios)
+                             get_scenario, list_scenarios,
+                             plans_for_scenarios)
 
 from .common import fmt_table, save
 
@@ -48,7 +49,7 @@ def run(quick: bool = True) -> dict:
     variants = (("adaptive", "static", "static_cold", "vllm")
                 if quick else
                 ("adaptive", "static", "static_cold", "vllm", "sarathi"))
-    results, rows = {}, []
+    cells = []
     for name in list_scenarios():
         scn = get_scenario(name)
         if name == "rate_shift":
@@ -59,7 +60,18 @@ def run(quick: bool = True) -> dict:
                 horizon=min(scn.horizon, 120.0))
         else:
             cfg = ClosedLoopConfig(n_servers=8, seed=0)
-        res = compare_policies(scn, cfg, variants=variants)
+        trace = scn.generate(seed=cfg.seed, horizon=cfg.horizon,
+                             compression=cfg.compression,
+                             rate_scale=cfg.rate_scale)
+        cells.append((name, scn, cfg, trace))
+    # all cold-start + hindsight plans of the registry in ONE batched
+    # interior-point solve (used to be 2 simplex solves per scenario)
+    plans = plans_for_scenarios([c[1] for c in cells], [c[3] for c in cells],
+                                [c[2] for c in cells])
+    results, rows = {}, []
+    for (name, scn, cfg, trace), plan in zip(cells, plans):
+        res = compare_policies(scn, cfg, variants=variants,
+                               trace=trace, plans=plan)
         results[name] = res
         rows.extend(_rows_of(res))
     print(fmt_table(rows, COLS,

@@ -12,6 +12,7 @@ from __future__ import annotations
 import numpy as np
 
 from repro.core.planning import SLISpec, solve_bundled_lp, tpot_of_plan
+from repro.core.planning_batch import solve_plan_batch
 from repro.core.types import Pricing, ServicePrimitives, WorkloadClass
 
 from .common import save
@@ -23,21 +24,24 @@ CLASSES = [
 PRIM = ServicePrimitives()
 PRICING = Pricing(0.1, 0.2)
 
+_CAP_FIELD = {"prefill_fairness": "prefill_fairness_cap",
+              "decode_fairness": "decode_fairness_cap",
+              "tpot": "tpot_cap"}
+
 
 def _sweep(kind: str, caps) -> list[dict]:
-    rows = []
-    for cap in caps:
-        if kind == "prefill_fairness":
-            sli = SLISpec(prefill_fairness_cap=cap)
-        elif kind == "decode_fairness":
-            sli = SLISpec(decode_fairness_cap=cap)
-        else:
-            sli = SLISpec(tpot_cap=cap)
-        plan = solve_bundled_lp(CLASSES, PRIM, PRICING, sli=sli)
-        rows.append({"cap": float(cap),
-                     "revenue": float(plan.revenue_rate),
-                     "tpot": float(tpot_of_plan(plan))})
-    return rows
+    """One whole cap frontier as a single batched planning solve (the cap
+    values ride the batch axis of ``solve_plan_batch``; this used to be a
+    Python loop of simplex solves)."""
+    caps = np.asarray(caps, dtype=float)
+    pb = solve_plan_batch(
+        [CLASSES] * len(caps), PRIM, PRICING,
+        sli=SLISpec(**{_CAP_FIELD[kind]: caps}))
+    assert bool(pb.converged.all()), "planner did not converge on a cap"
+    return [{"cap": float(cap),
+             "revenue": float(pb.revenue_rate[k]),
+             "tpot": float(tpot_of_plan(pb.solution(k)))}
+            for k, cap in enumerate(caps)]
 
 
 def run(quick: bool = True) -> dict:

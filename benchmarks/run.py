@@ -14,8 +14,9 @@ import traceback
 from . import (bench_ablations, bench_calibration, bench_charging,
                bench_classes, bench_convergence, bench_ctmc_speed,
                bench_engine_speed, bench_frontier, bench_matched,
-               bench_roofline, bench_scale_sweep, bench_scenarios,
-               bench_sensitivity, bench_sli_pareto, bench_trace_replay)
+               bench_optimality_gap, bench_roofline, bench_scale_sweep,
+               bench_scenarios, bench_sensitivity, bench_sli_pareto,
+               bench_trace_replay)
 from .common import ART
 
 
@@ -47,6 +48,7 @@ SUITE = [
     ("classes", bench_classes),                # EC.8.4
     ("scenarios", bench_scenarios),            # workload registry closed loop
     ("convergence", bench_convergence),        # EC.8.5
+    ("optimality_gap", bench_optimality_gap),  # Theorems 2-3 vanishing gap
     ("ctmc_speed", bench_ctmc_speed),          # uniformized engine micro-bench
     ("engine_speed", bench_engine_speed),      # trace-replay engine micro-bench
     ("ablations", bench_ablations),            # EC.8.6

@@ -11,7 +11,22 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["AxisType", "shard_map", "make_mesh", "pcast", "prng_key"]
+__all__ = ["AxisType", "shard_map", "make_mesh", "pcast", "prng_key",
+           "enable_x64"]
+
+try:  # scoped double precision (the lp_jax solver runs inside this)
+    from jax.experimental import enable_x64
+except ImportError:  # very old jax: emulate with a global-flag swap
+    from contextlib import contextmanager
+
+    @contextmanager
+    def enable_x64(new_val: bool = True):
+        old = jax.config.jax_enable_x64
+        jax.config.update("jax_enable_x64", new_val)
+        try:
+            yield
+        finally:
+            jax.config.update("jax_enable_x64", old)
 
 try:  # jax >= 0.5-ish: explicit axis types on mesh axes
     from jax.sharding import AxisType

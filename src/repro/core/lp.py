@@ -53,19 +53,26 @@ def _pivot(T: np.ndarray, basis: np.ndarray, row: int, col: int) -> None:
 
 
 def _simplex(T: np.ndarray, basis: np.ndarray, n_total: int, tol: float,
-             max_iter: int) -> int:
+             max_iter: int, bland_after: Optional[int] = None) -> int:
     """Run primal simplex on tableau T (last row = -reduced costs for max).
 
-    Uses Dantzig rule with a Bland fallback after stalling to guarantee
-    termination.  Returns iteration count.
+    Uses Dantzig rule with a Bland fallback to guarantee termination: the
+    fallback engages after a run of degenerate (zero-progress) pivots,
+    and unconditionally once the *total* pivot count passes
+    ``bland_after`` (default ``10 * (m + n_total)``) -- Dantzig can cycle
+    through degenerate bases without ever stalling on one of them, so a
+    stall counter alone is not a termination proof; Bland's rule is.
+    Returns the iteration count.
     """
     m = T.shape[0] - 1
+    if bland_after is None:
+        bland_after = 10 * (m + n_total)
     it = 0
     stall = 0
     while it < max_iter:
         it += 1
         red = T[-1, :n_total]
-        use_bland = stall > 2 * (m + n_total)
+        use_bland = stall > 2 * (m + n_total) or it > bland_after
         if use_bland:
             cand = np.nonzero(red < -tol)[0]
             if cand.size == 0:
@@ -101,8 +108,14 @@ def linprog_max(
     b_eq: Optional[np.ndarray] = None,
     tol: float = 1e-9,
     max_iter: int = 20000,
+    bland_after: Optional[int] = None,
 ) -> LPResult:
-    """Solve ``max c'x s.t. A_ub x <= b_ub, A_eq x == b_eq, x >= 0``."""
+    """Solve ``max c'x s.t. A_ub x <= b_ub, A_eq x == b_eq, x >= 0``.
+
+    ``bland_after`` caps the number of Dantzig pivots before each phase
+    permanently switches to Bland's rule (anti-cycling safety valve);
+    ``None`` picks ``10 * (rows + columns)``.
+    """
     c = np.asarray(c, dtype=np.float64)
     n = c.shape[0]
     if A_ub is None:
@@ -141,7 +154,7 @@ def linprog_max(
     # Price out the artificial basis.
     T[-1, :] -= T[:m, :].sum(axis=0)
     basis = np.arange(n_sn, n_sn + m)
-    it1 = _simplex(T, basis, n_sn + m, tol, max_iter)
+    it1 = _simplex(T, basis, n_sn + m, tol, max_iter, bland_after)
     phase1 = -T[-1, -1]
     if phase1 > 1e-7 * max(1.0, np.abs(b).max()):
         raise LPInfeasible(f"phase-1 infeasibility residual {phase1:.3e}")
@@ -167,7 +180,7 @@ def linprog_max(
             T2[-1, :] -= T2[-1, basis[r]] * T2[r, :]
     # Forbid re-entry of artificials by construction (they're not in T2).
     basis2 = basis.copy()
-    it2 = _simplex(T2, basis2, n_sn, tol, max_iter)
+    it2 = _simplex(T2, basis2, n_sn, tol, max_iter, bland_after)
 
     x_aug = np.zeros(n_sn)
     for r in range(m):

@@ -19,7 +19,10 @@ import numpy as np
 from .planning import PlanSolution, SLISpec, solve_plan
 from .types import Pricing, ServicePrimitives, WorkloadClass
 
-__all__ = ["OnlineControllerConfig", "OnlineController"]
+__all__ = ["OnlineControllerConfig", "OnlineController",
+           "replan_controllers_batch"]
+
+SOLVERS = ("simplex", "lp_jax")
 
 
 @dataclass(frozen=True)
@@ -32,6 +35,16 @@ class OnlineControllerConfig:
     planning_theta: float = 3e-4  # regularisation theta in the planning LP
     objective: str = "bundled"
     sli: Optional[SLISpec] = None
+    # "simplex" = the exact serial oracle (repro.core.lp); "lp_jax" =
+    # the jitted fixed-iteration interior point (repro.core.lp_jax):
+    # every same-shape replan epoch reuses one compiled kernel, which is
+    # what keeps adaptive closed-loop sweeps off the Python simplex.
+    solver: str = "simplex"
+
+    def __post_init__(self) -> None:
+        if self.solver not in SOLVERS:
+            raise ValueError(
+                f"solver {self.solver!r} not in {SOLVERS}")
 
 
 class OnlineController:
@@ -89,23 +102,36 @@ class OnlineController:
             lam[i] = max(cfg.safety * len(ts) / denom, cfg.lam_min)
         return lam
 
-    def replan(self, t: float) -> PlanSolution:
+    def _planner_classes(self, t: float) -> tuple:
         self.lam_hat = self.estimate_rates(t)
-        classes = tuple(
+        return tuple(
             dataclasses.replace(
                 c, arrival_rate=float(self.lam_hat[i]),
                 patience=self.cfg.planning_theta,
             )
             for i, c in enumerate(self.classes)
         )
-        self.plan = solve_plan(
-            classes, self.prim, self.pricing,
-            objective=self.cfg.objective, sli=self.cfg.sli,
-        )
+
+    def _publish(self, plan: PlanSolution) -> PlanSolution:
+        self.plan = plan
         self.replan_count += 1
         if self.on_replan is not None:
-            self.on_replan(self.plan, self.plan.mixed_servers(self.n))
-        return self.plan
+            self.on_replan(plan, plan.mixed_servers(self.n))
+        return plan
+
+    def replan(self, t: float) -> PlanSolution:
+        classes = self._planner_classes(t)
+        if self.cfg.solver == "lp_jax":
+            from .planning_batch import solve_plan_jax
+
+            plan = solve_plan_jax(classes, self.prim, self.pricing,
+                                  objective=self.cfg.objective,
+                                  sli=self.cfg.sli)
+        else:
+            plan = solve_plan(classes, self.prim, self.pricing,
+                              objective=self.cfg.objective,
+                              sli=self.cfg.sli)
+        return self._publish(plan)
 
     def maybe_replan(self, t: float) -> Optional[PlanSolution]:
         if t >= self._next_replan:
@@ -118,3 +144,40 @@ class OnlineController:
         if self.plan is None:
             return self.n
         return self.plan.mixed_servers(self.n)
+
+
+def replan_controllers_batch(controllers: Sequence[OnlineController],
+                             t: float) -> list:
+    """Replan MANY controllers at one control epoch in a single vmapped
+    interior-point solve (paired closed-loop sweeps: every scenario cell
+    carries its own controller, and their epochs align by construction).
+
+    All controllers must share objective/SLI config (one LP structure);
+    each contributes its own estimated rates, primitives, pricing and
+    capacity.  Publishes each plan through the normal ``on_replan`` hook
+    and returns the :class:`PlanSolution` list.
+    """
+    from .planning_batch import solve_plan_batch
+
+    if not controllers:
+        return []
+    cfg0 = controllers[0].cfg
+    for c in controllers:
+        if (c.cfg.objective, c.cfg.sli) != (cfg0.objective, cfg0.sli):
+            raise ValueError(
+                "replan_controllers_batch needs a homogeneous "
+                "objective/sli across controllers (got "
+                f"{(c.cfg.objective, c.cfg.sli)} vs "
+                f"{(cfg0.objective, cfg0.sli)})")
+    instances = [c._planner_classes(t) for c in controllers]
+    pb = solve_plan_batch(
+        instances,
+        prims=[c.prim for c in controllers],
+        pricings=[c.pricing for c in controllers],
+        objective=cfg0.objective,
+        sli=cfg0.sli).require_converged("replan_controllers_batch")
+    plans = []
+    for k, c in enumerate(controllers):
+        c._next_replan = max(c._next_replan, t + c.cfg.replan_every)
+        plans.append(c._publish(pb.solution(k)))
+    return plans

@@ -38,7 +38,40 @@ __all__ = [
     "solve_separate_lp",
     "solve_plan",
     "tpot_of_plan",
+    "validate_planning_instance",
 ]
+
+
+def validate_planning_instance(classes, capacity: float = 1.0,
+                               label: str = "planning LP") -> tuple:
+    """Reject degenerate planner inputs with a diagnostic LPInfeasible.
+
+    The simplex/IPM layers assume a nonempty class list with *some*
+    offered traffic and positive service capacity; violating that used
+    to surface as an IndexError deep in the tableau (empty classes) or a
+    silently meaningless all-zero plan (no traffic).  Shared by
+    :func:`solve_plan` and :func:`repro.core.planning_batch.solve_plan_batch`.
+    """
+    from .lp import LPInfeasible
+
+    classes = tuple(classes)
+    if not classes:
+        raise LPInfeasible(
+            f"{label}: empty class list -- the steady-state plan needs at "
+            "least one workload class")
+    lam = np.array([c.arrival_rate for c in classes], dtype=np.float64)
+    if not np.any(lam > 0):
+        names = [c.name for c in classes]
+        raise LPInfeasible(
+            f"{label}: degenerate instance -- all arrival rates are zero "
+            f"(classes={names}); the plan is undefined without traffic "
+            "(feed estimated rates, e.g. OnlineController.estimate_rates, "
+            "which floors at lam_min)")
+    if not capacity > 0:
+        raise LPInfeasible(
+            f"{label}: zero service capacity (capacity={capacity:g}) "
+            f"cannot serve offered load lam_total={float(lam.sum()):.4g}")
+    return classes
 
 
 @dataclass(frozen=True)
@@ -245,9 +278,15 @@ def _solve(
     pricing: Pricing,
     objective: str,
     sli: Optional[SLISpec] = None,
+    capacity: float = 1.0,
 ) -> PlanSolution:
-    classes = tuple(classes)
+    classes = validate_planning_instance(
+        classes, capacity, label=f"planning LP ({objective})")
     arr = rate_arrays(classes, prim)
+    if capacity != 1.0:  # uniform server-speed scale (elasticity studies)
+        arr = dict(arr)
+        for k in ("mu_p", "mu_m", "mu_s"):
+            arr[k] = arr[k] * capacity
     I = len(classes)
     B = float(prim.batch_cap)
     A_ub, b_ub, A_eq, b_eq, L = _base_constraints(arr, B)
@@ -272,8 +311,23 @@ def _solve(
         raise ValueError(objective)
     c -= pen
 
-    res = linprog_max(c, np.array(A_ub), np.array(b_ub), np.array(A_eq),
-                      np.array(b_eq))
+    from .lp import LPInfeasible
+
+    try:
+        res = linprog_max(c, np.array(A_ub), np.array(b_ub), np.array(A_eq),
+                          np.array(b_eq))
+    except LPInfeasible as exc:
+        # Enrich the bare phase-1 residual with the planning instance:
+        # with theta_i = 0 the prefill flow balance pins x_i = lam_i/mu_p_i,
+        # so overload (sum of pinned x_i > 1) is the canonical cause.
+        zero_theta = arr["theta"] <= 0
+        pinned = np.where(zero_theta, arr["lam"] / arr["mu_p"], 0.0)
+        raise LPInfeasible(
+            f"planning LP ({objective}) infeasible for I={I} classes "
+            f"(B={B:g}): {exc}; lam={np.round(arr['lam'], 6).tolist()}, "
+            f"theta={np.round(arr['theta'], 6).tolist()}; zero-patience "
+            f"classes pin x_i = lam_i/mu_p_i with total pinned prefill "
+            f"occupancy {float(pinned.sum()):.4g} (must be <= 1)") from exc
     x = res.x
     sol_pen = float(pen @ x)
     plan = PlanSolution(
@@ -299,11 +353,12 @@ def solve_bundled_lp(
     prim: ServicePrimitives = None,
     pricing: Pricing = None,
     sli: Optional[SLISpec] = None,
+    capacity: float = 1.0,
 ) -> PlanSolution:
     """Solve the bundled-charging steady-state LP (40) (+ optional SLI rows)."""
     prim = prim or ServicePrimitives()
     pricing = pricing or Pricing()
-    return _solve(classes, prim, pricing, "bundled", sli)
+    return _solve(classes, prim, pricing, "bundled", sli, capacity)
 
 
 def solve_separate_lp(
@@ -311,18 +366,22 @@ def solve_separate_lp(
     prim: ServicePrimitives = None,
     pricing: Pricing = None,
     sli: Optional[SLISpec] = None,
+    capacity: float = 1.0,
 ) -> PlanSolution:
     """Solve the separate-charging steady-state LP (42) (+ optional SLI rows)."""
     prim = prim or ServicePrimitives()
     pricing = pricing or Pricing()
-    return _solve(classes, prim, pricing, "separate", sli)
+    return _solve(classes, prim, pricing, "separate", sli, capacity)
 
 
 def solve_plan(classes, prim=None, pricing=None, objective="bundled",
-               sli: Optional[SLISpec] = None) -> PlanSolution:
+               sli: Optional[SLISpec] = None,
+               capacity: float = 1.0) -> PlanSolution:
+    """Front door of the planning layer (``capacity`` uniformly scales the
+    service rates; ``capacity <= 0`` raises a diagnostic LPInfeasible)."""
     if objective == "bundled":
-        return solve_bundled_lp(classes, prim, pricing, sli)
-    return solve_separate_lp(classes, prim, pricing, sli)
+        return solve_bundled_lp(classes, prim, pricing, sli, capacity)
+    return solve_separate_lp(classes, prim, pricing, sli, capacity)
 
 
 def tpot_of_plan(plan: PlanSolution) -> float:

@@ -1,0 +1,376 @@
+"""Batched assembly + solve of the steady-state planning LPs (Eqs. 40/42).
+
+Stacks the planning constraint blocks of MANY instances -- workload-class
+configurations, pricing points, patience (theta) values, capacity scales,
+SLI caps -- into (S, m, n) tensors and solves them in ONE jitted/vmapped
+interior-point run (:func:`repro.core.lp_jax.solve_lp_batch`).  This is
+the planner's analogue of ``ctmc_jax``/``engine_jax``: the serial
+:func:`repro.core.planning.solve_plan` simplex stays the semantics
+oracle, and every layer that used to loop Python LP solves (sweep grids,
+closed-loop hindsight plans, SLI cap sweeps, controller replans) batches
+through here instead.
+
+Block layout per instance (identical to :mod:`repro.core.planning`):
+
+    columns  [x(I) | ym(I) | ys(I) | qp(I) | qd(I) | aux(penalty)]
+    ub rows  [3 capacity | fairness caps | penalty pairs | TPOT]
+    eq rows  [I prefill flow balance | I decode flow balance | I q_d pin]
+
+Instances with fewer classes than the batch maximum are padded with a
+negligible filler class (``lam = PAD_LAM``, ``theta = 1``) whose
+occupancy/revenue contribution is below the solver tolerance; results
+are sliced back to each instance's true class count, and pairwise SLI
+rows that would reference a filler class are neutralised per instance
+(the filler must never act as an absolute fairness anchor).
+
+SLI support matches :class:`repro.core.planning.SLISpec`, with the cap
+fields (``prefill_fairness_cap`` / ``decode_fairness_cap`` /
+``tpot_cap``) additionally accepting length-S arrays -- what
+``bench_sli_pareto`` uses to solve a whole Pareto frontier in one call.
+Penalty weights and ``pin_zero_decode_queue`` are static per batch
+(they change the block *structure*, not just values).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .lp_jax import DEFAULT_ITERS, DEFAULT_TOL, solve_lp_batch
+from .planning import PlanSolution, SLISpec, validate_planning_instance
+from .types import Pricing, ServicePrimitives, WorkloadClass, rate_arrays
+
+__all__ = ["PlanBatch", "solve_plan_batch", "solve_plan_jax", "PAD_LAM"]
+
+PAD_LAM = 1e-9  # filler-class arrival rate (keeps padded rows nonsingular)
+
+
+def _cap_array(v, S: int, name: str) -> Optional[np.ndarray]:
+    if v is None:
+        return None
+    out = np.broadcast_to(np.asarray(v, dtype=np.float64), (S,)).copy()
+    if not np.all(np.isfinite(out)):
+        raise ValueError(f"{name}: caps must be finite, got {out}")
+    return out
+
+
+@dataclass
+class PlanBatch:
+    """Stacked plan solutions + solver diagnostics for S instances."""
+
+    objective: str
+    instances: tuple  # per-instance class tuples (unpadded)
+    prims: tuple
+    pricings: tuple
+    x: np.ndarray  # (S, I_max)
+    ym: np.ndarray
+    ys: np.ndarray
+    qp: np.ndarray
+    qd: np.ndarray
+    revenue_rate: np.ndarray  # (S,) revenue part (penalty added back)
+    sli_value: np.ndarray  # (S,) penalty part (0 without penalties)
+    dual_capacity: np.ndarray  # (S, 3) duals of the capacity rows
+    primal_res: np.ndarray  # (S,) solver diagnostics (relative)
+    dual_res: np.ndarray
+    gap: np.ndarray
+    converged: np.ndarray  # (S,) bool
+    n_iter: np.ndarray  # (S,)
+    meta: dict = field(default_factory=dict)
+
+    def __len__(self) -> int:
+        return len(self.instances)
+
+    def solution(self, k: int) -> PlanSolution:
+        """Instance ``k`` as a :class:`PlanSolution` (padding sliced off);
+        drop-in for the policy constructors, ``lp`` left ``None``."""
+        I = len(self.instances[k])
+        return PlanSolution(
+            classes=self.instances[k],
+            prim=self.prims[k],
+            pricing=self.pricings[k],
+            objective=self.objective,
+            x=self.x[k, :I].copy(),
+            ym=self.ym[k, :I].copy(),
+            ys=self.ys[k, :I].copy(),
+            qp=self.qp[k, :I].copy(),
+            qd=self.qd[k, :I].copy(),
+            revenue_rate=float(self.revenue_rate[k]),
+            sli_value=float(self.sli_value[k]),
+            lp=None,
+            dual_capacity=self.dual_capacity[k].copy(),
+        )
+
+    def solutions(self) -> list:
+        return [self.solution(k) for k in range(len(self))]
+
+    def require_converged(self, label: str = "planning batch") -> "PlanBatch":
+        """Raise a diagnostic LPInfeasible unless every instance converged.
+
+        The IPM cannot raise from inside ``jit``, so infeasible/unbounded
+        instances surface as ``converged == False``; every entry point
+        that hands plans to a *policy* (``solve_plan_jax``, the
+        controller replan paths, scenario plan batching, cache prewarm)
+        must funnel through this so a garbage plan is never published --
+        matching the simplex oracle's eager LPInfeasible.
+        """
+        from .lp import LPInfeasible
+
+        if bool(np.all(self.converged)):
+            return self
+        bad = np.nonzero(~np.asarray(self.converged, dtype=bool))[0]
+        detail = ", ".join(
+            f"[{k}] primal={self.primal_res[k]:.2e} "
+            f"dual={self.dual_res[k]:.2e} gap={self.gap[k]:.2e}"
+            for k in bad[:4])
+        raise LPInfeasible(
+            f"{label} ({self.objective}): {bad.size}/{len(self)} instances "
+            f"did not converge within the fixed iteration budget "
+            f"({detail}{', ...' if bad.size > 4 else ''}); the instance is "
+            f"likely infeasible or unbounded -- the serial solve_plan "
+            f"oracle raises eagerly on the same input")
+
+
+def _pad_instances(instances) -> tuple:
+    """Equalise class counts with a negligible filler class."""
+    I_max = max(len(cl) for cl in instances)
+    filler = WorkloadClass("__pad__", prompt_len=1.0, decode_len=1.0,
+                           arrival_rate=PAD_LAM, patience=1.0)
+    return tuple(tuple(cl) + (filler,) * (I_max - len(cl))
+                 for cl in instances), I_max
+
+
+def _stack_arrays(padded, prims, capacity) -> dict:
+    """(S, I) parameter tensors from the padded instances."""
+    arrs = [rate_arrays(cl, prim) for cl, prim in zip(padded, prims)]
+    out = {k: np.stack([a[k] for a in arrs]) for k in arrs[0]}
+    if capacity is not None:
+        for k in ("mu_p", "mu_m", "mu_s"):
+            out[k] = out[k] * capacity[:, None]
+    return out
+
+
+def _assemble(arr, prim_B, prim_tau, prim_gamma, prim_chunk, cp, cd,
+              objective: str, sli: Optional[SLISpec], I_per):
+    """Stacked (c, A_ub, b_ub, A_eq, b_eq) planning tensors.
+
+    ``arr`` holds (S, I) arrays; the prim/pricing arguments are (S,)
+    arrays and ``I_per`` the per-instance TRUE class counts.  Row/column
+    order mirrors :mod:`repro.core.planning` exactly (capacity rows
+    first, so ``dual_ub[:, :3]`` are the capacity shadow prices there
+    too).  Pairwise SLI rows touching a padded class are neutralised
+    per instance (zero row, slack rhs) -- a filler class's x ~ 0 would
+    otherwise turn ``x_i - x_pad <= cap`` into an absolute cap that the
+    unpadded LP does not have.
+    """
+    S, I = arr["lam"].shape
+    I_per = np.asarray(I_per, dtype=int)
+    ix, iym, iys, iqp, iqd = (np.arange(I), I + np.arange(I),
+                              2 * I + np.arange(I), 3 * I + np.arange(I),
+                              4 * I + np.arange(I))
+    n_base = 5 * I
+
+    pen_p = sli is not None and np.any(sli.prefill_fairness_penalty > 0)
+    pen_d = sli is not None and np.any(sli.decode_fairness_penalty > 0)
+    col_tp = n_base if pen_p else None
+    col_td = n_base + int(pen_p) if pen_d else None
+    n_cols = n_base + int(pen_p) + int(pen_d)
+
+    pairs = [(i, j) for i in range(I) for j in range(I) if i != j]
+
+    A_ub, b_ub = [], []
+
+    def ub_row(cols, vals, rhs, real=None):
+        """One <= row pattern; ``vals`` entries broadcast to (S,).
+
+        ``real`` masks the row OFF (zero coefficients, rhs 1) for
+        instances where it references a padded class.
+        """
+        row = np.zeros((S, n_cols))
+        rhs = np.broadcast_to(np.asarray(rhs, dtype=np.float64), (S,)).copy()
+        for c, v in zip(cols, vals):
+            row[:, c] = np.broadcast_to(v, (S,))
+        if real is not None:
+            row[~real, :] = 0.0
+            rhs[~real] = 1.0  # 0 <= 1: trivially slack
+        A_ub.append(row)
+        b_ub.append(rhs)
+
+    B = prim_B
+    ub_row(ix, [1.0] * I, 1.0)  # prefill capacity
+    row = np.zeros((S, n_cols))
+    row[:, iym] = 1.0
+    row[:, ix] = -(B - 1.0)[:, None]
+    A_ub.append(row)
+    b_ub.append(np.zeros(S))  # mixed decode capacity
+    row = np.zeros((S, n_cols))
+    row[:, iys] = 1.0
+    row[:, ix] = B[:, None]
+    A_ub.append(row)
+    b_ub.append(B.copy())  # solo decode capacity
+
+    cap_p = _cap_array(sli.prefill_fairness_cap, S,
+                       "prefill_fairness_cap") if sli else None
+    cap_d = _cap_array(sli.decode_fairness_cap, S,
+                       "decode_fairness_cap") if sli else None
+    cap_t = _cap_array(sli.tpot_cap, S, "tpot_cap") if sli else None
+    pair_real = {(i, j): (I_per > max(i, j)) for i, j in pairs}
+    if cap_p is not None:
+        for i, j in pairs:
+            ub_row([ix[i], ix[j]], [1.0, -1.0], cap_p, real=pair_real[i, j])
+    if cap_d is not None:
+        for i, j in pairs:
+            ub_row([iys[i], iys[j]], [1.0, -1.0], cap_d,
+                   real=pair_real[i, j])
+    for col, block, on in ((col_tp, ix, pen_p), (col_td, iys, pen_d)):
+        if not on:
+            continue
+        for i, j in pairs:
+            ub_row([block[i], block[j], col], [1.0, -1.0, -1.0], 0.0,
+                   real=pair_real[i, j])
+    if cap_t is not None:
+        # TPOT cap (47), cross-multiplied; coefficient on every x column.
+        coef = ((prim_tau * (B - 1.0) - B / prim_gamma)
+                - cap_t * ((B - 1.0) - B))
+        row = np.zeros((S, n_cols))
+        row[:, ix] = coef[:, None]
+        A_ub.append(row)
+        b_ub.append(cap_t * B - B / prim_gamma)
+
+    eq_rows, b_eq = [], []
+    for i in range(I):
+        row = np.zeros((S, n_cols))
+        row[:, ix[i]] = arr["mu_p"][:, i]
+        row[:, iqp[i]] = arr["theta"][:, i]
+        eq_rows.append(row)
+        b_eq.append(arr["lam"][:, i])  # prefill flow balance
+    for i in range(I):
+        row = np.zeros((S, n_cols))
+        row[:, ix[i]] = arr["mu_p"][:, i]
+        row[:, iqd[i]] = -arr["theta"][:, i]
+        row[:, iym[i]] = -arr["mu_m"][:, i]
+        row[:, iys[i]] = -arr["mu_s"][:, i]
+        eq_rows.append(row)
+        b_eq.append(np.zeros(S))  # decode flow balance
+    if sli is not None and sli.pin_zero_decode_queue:
+        for i in range(I):
+            row = np.zeros((S, n_cols))
+            row[:, iqd[i]] = 1.0
+            eq_rows.append(row)
+            b_eq.append(np.zeros(S))
+
+    c = np.zeros((S, n_cols))
+    if objective == "bundled":
+        w = cp[:, None] * arr["P"] + cd[:, None] * arr["D"]  # Eq. (21)
+        c[:, iym] = w * arr["mu_m"]
+        c[:, iys] = w * arr["mu_s"]
+    elif objective == "separate":
+        c[:, ix] = (cp * prim_chunk / prim_tau)[:, None]
+        c[:, iym] = (cd / prim_tau)[:, None]
+        c[:, iys] = (cd * prim_gamma)[:, None]
+    else:
+        raise ValueError(objective)
+    pen = np.zeros((S, n_cols))
+    if pen_p:
+        pen[:, col_tp] = np.broadcast_to(sli.prefill_fairness_penalty, (S,))
+    if pen_d:
+        pen[:, col_td] = np.broadcast_to(sli.decode_fairness_penalty, (S,))
+    c = c - pen
+
+    return (c, np.stack(A_ub, axis=1), np.stack(b_ub, axis=1),
+            np.stack(eq_rows, axis=1), np.stack(b_eq, axis=1), pen)
+
+
+def solve_plan_batch(
+    instances: Sequence[Sequence[WorkloadClass]],
+    prim: Optional[ServicePrimitives] = None,
+    pricing: Optional[Pricing] = None,
+    *,
+    objective: str = "bundled",
+    sli: Optional[SLISpec] = None,
+    prims: Optional[Sequence[ServicePrimitives]] = None,
+    pricings: Optional[Sequence[Pricing]] = None,
+    capacity=None,
+    iters: int = DEFAULT_ITERS,
+    tol: float = DEFAULT_TOL,
+) -> PlanBatch:
+    """Solve the planning LP for every instance in ONE vmapped IPM run.
+
+    ``instances`` is a sequence of workload-class sequences (class counts
+    may differ; padding is internal).  ``prims`` / ``pricings`` override
+    the shared ``prim`` / ``pricing`` per instance; ``capacity`` is an
+    optional length-S uniform service-rate scale.  Degenerate instances
+    (empty, zero traffic, nonpositive capacity) raise the same
+    diagnostic :class:`repro.core.lp.LPInfeasible` as the serial oracle.
+    """
+    instances = [tuple(cl) for cl in instances]
+    S = len(instances)
+    if S == 0:
+        raise ValueError("solve_plan_batch needs at least one instance")
+    prims = tuple(prims) if prims is not None else (
+        (prim or ServicePrimitives(),) * S)
+    pricings = tuple(pricings) if pricings is not None else (
+        (pricing or Pricing(),) * S)
+    if len(prims) != S or len(pricings) != S:
+        raise ValueError("prims/pricings must match the instance count")
+    capacity = (np.broadcast_to(np.asarray(capacity, dtype=np.float64),
+                                (S,)).copy()
+                if capacity is not None else None)
+    for k, cl in enumerate(instances):
+        validate_planning_instance(
+            cl, 1.0 if capacity is None else float(capacity[k]),
+            label=f"planning LP batch[{k}] ({objective})")
+
+    padded, I_max = _pad_instances(instances)
+    arr = _stack_arrays(padded, prims, capacity)
+    to_f = lambda vals: np.array(vals, dtype=np.float64)  # noqa: E731
+    c, A_ub, b_ub, A_eq, b_eq, pen = _assemble(
+        arr,
+        to_f([p.batch_cap for p in prims]),
+        to_f([p.tau_mix for p in prims]),
+        to_f([p.gamma for p in prims]),
+        to_f([p.chunk for p in prims]),
+        to_f([p.c_p for p in pricings]),
+        to_f([p.c_d for p in pricings]),
+        objective, sli, [len(cl) for cl in instances])
+
+    res = solve_lp_batch(c, A_ub, b_ub, A_eq, b_eq, iters=iters, tol=tol)
+    sol_pen = np.einsum("sj,sj->s", pen, res.x)
+    blk = lambda j: res.x[:, j * I_max:(j + 1) * I_max]  # noqa: E731
+    return PlanBatch(
+        objective=objective,
+        instances=tuple(instances),
+        prims=prims,
+        pricings=pricings,
+        x=blk(0), ym=blk(1), ys=blk(2), qp=blk(3), qd=blk(4),
+        revenue_rate=res.fun + sol_pen,
+        sli_value=sol_pen,
+        dual_capacity=res.dual_ub[:, :3],
+        primal_res=res.primal_res,
+        dual_res=res.dual_res,
+        gap=res.gap,
+        converged=res.converged,
+        n_iter=res.n_iter,
+        meta={"iters": int(iters), "tol": float(tol), "I_max": int(I_max),
+              "n_ub": int(A_ub.shape[1]), "n_eq": int(A_eq.shape[1])},
+    )
+
+
+def solve_plan_jax(classes, prim=None, pricing=None, objective="bundled",
+                   sli: Optional[SLISpec] = None, capacity: float = 1.0,
+                   iters: int = DEFAULT_ITERS,
+                   tol: float = DEFAULT_TOL) -> PlanSolution:
+    """Single-instance planning solve on the jitted fixed-iteration path.
+
+    Call-compatible with :func:`repro.core.planning.solve_plan`,
+    including raising :class:`repro.core.lp.LPInfeasible` when the
+    instance does not admit a converged plan; repeated same-shape solves
+    (controller replan epochs) reuse one compiled kernel instead of
+    re-running the Python simplex.
+    """
+    pb = solve_plan_batch(
+        [tuple(classes)], prim, pricing, objective=objective, sli=sli,
+        capacity=None if capacity == 1.0 else [capacity],
+        iters=iters, tol=tol)
+    return pb.require_converged("solve_plan_jax").solution(0)

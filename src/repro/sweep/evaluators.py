@@ -40,10 +40,24 @@ __all__ = [
     "evaluate_ctmc_cells",
     "evaluate_ctmc_jax_cells",
     "evaluate_lp_cell",
+    "evaluate_lp_jax_grid",
     "evaluate_trace_policy",
     "evaluate_engine_cell",
     "evaluate_engine_jax_cells",
+    "prewarm_plans",
 ]
+
+# lp-family policy token -> MixContext.plan kind (shared by the serial
+# "lp" evaluator and the batched "lp_jax" one)
+LP_TOKEN_KINDS = {"lp": "base", "lp_bundled": "base",
+                  "lp_separate": "separate", "lp_sli": "sli"}
+
+# plan kind -> (objective, SLISpec) for the batched planner
+PLAN_KINDS = {
+    "base": ("bundled", None),
+    "sli": ("bundled", SLISpec(pin_zero_decode_queue=True)),
+    "separate": ("separate", None),
+}
 
 ABLATION_TOKENS = ("GG-SP", "FI-WSP", "GI-WSP", "GF-WSP", "FG-SP")
 
@@ -164,6 +178,14 @@ def resolve_policy(token: str, ctx: MixContext, n: int) -> PolicySpec:
     name, args = parse_policy_token(token)
     if name == "gate_and_route":
         return gate_and_route(ctx.plan("base"))
+    if name == "gate_and_route_separate":
+        # the same plan-tracking occupancy gate, instantiated from the
+        # Eq. (42) separate-charging plan and charged separately -- the
+        # Theorem 2/3 policy family under the other pricing scheme
+        # (bench_optimality_gap's separate-scheme policy)
+        return gate_and_route(
+            ctx.plan("separate"),
+            name="gate_and_route_separate").replace(charging="separate")
     if name == "prioritize_and_route":
         return prioritize_and_route(ctx.plan("separate"))
     if name == "sli_aware":
@@ -290,14 +312,16 @@ def evaluate_ctmc_jax_cells(ctx: MixContext, token: str, n: int,
 
 def evaluate_lp_cell(ctx: MixContext, token: str) -> dict:
     """Optimal-plan metrics for one mix (policy axis picks the objective)."""
-    from repro.core.planning import tpot_of_plan
-
     name, _ = parse_policy_token(token)
-    kind = {"lp": "base", "lp_bundled": "base",
-            "lp_separate": "separate", "lp_sli": "sli"}.get(name)
+    kind = LP_TOKEN_KINDS.get(name)
     if kind is None:
         raise ValueError(f"lp evaluator got non-lp policy token {token!r}")
-    plan = ctx.plan(kind)
+    return _lp_metrics(ctx.plan(kind))
+
+
+def _lp_metrics(plan) -> dict:
+    from repro.core.planning import tpot_of_plan
+
     m = {
         "revenue": float(plan.revenue_rate),
         "tpot": float(tpot_of_plan(plan)),
@@ -308,6 +332,101 @@ def evaluate_lp_cell(ctx: MixContext, token: str) -> dict:
         m[f"y_star/{i}"] = float(plan.ym[i] + plan.ys[i])
         m[f"qp_star/{i}"] = float(plan.qp[i])
     return m
+
+
+# ---------------------------------------------------------------------------
+# Batched planning-LP evaluator (vmapped interior point; same grid
+# semantics as "lp", whole (mix x policy) plane solved per plan kind)
+# ---------------------------------------------------------------------------
+
+
+def evaluate_lp_jax_grid(contexts: Sequence[MixContext],
+                         policies: Sequence[str],
+                         extra: Optional[dict] = None) -> dict:
+    """Metrics for every (mix, lp-policy) pair via
+    :func:`repro.core.planning_batch.solve_plan_batch` -- one vmapped
+    interior-point run per plan kind instead of a Python loop of simplex
+    solves.
+
+    Returns ``{(mix_index, policy_index): metrics}``; the runner
+    replicates cells over the degenerate (n, seed) axes exactly as for
+    the ``lp`` and ``fluid`` evaluators.  Cells carry the ``lp``
+    evaluator's keys plus solver diagnostics: ``lp_primal_res`` /
+    ``lp_dual_res`` / ``lp_gap`` (final relative residuals),
+    ``lp_converged`` (1.0 iff all three beat the tolerance) and
+    ``lp_iters`` (Newton steps taken).  ``extra["lp_jax"]`` may override
+    ``{"iters": ..., "tol": ...}``.
+    """
+    from repro.core.planning_batch import solve_plan_batch
+
+    kw = dict((extra or {}).get("lp_jax", {}))
+    jobs: dict = {}  # plan kind -> list of (mi, pi)
+    for pi, token in enumerate(policies):
+        name, _ = parse_policy_token(token)
+        kind = LP_TOKEN_KINDS.get(name)
+        if kind is None:
+            raise ValueError(
+                f"lp_jax evaluator got non-lp policy token {token!r}")
+        for mi in range(len(contexts)):
+            jobs.setdefault(kind, []).append((mi, pi))
+
+    out: dict = {}
+    for kind, cells in jobs.items():
+        objective, sli = PLAN_KINDS[kind]
+        pb = solve_plan_batch(
+            [contexts[mi].classes for mi, _ in cells],
+            prims=[contexts[mi].prim for mi, _ in cells],
+            pricings=[contexts[mi].pricing for mi, _ in cells],
+            objective=objective, sli=sli, **kw)
+        for b, (mi, pi) in enumerate(cells):
+            m = _lp_metrics(pb.solution(b))
+            m["lp_primal_res"] = float(pb.primal_res[b])
+            m["lp_dual_res"] = float(pb.dual_res[b])
+            m["lp_gap"] = float(pb.gap[b])
+            m["lp_converged"] = float(bool(pb.converged[b]))
+            m["lp_iters"] = float(pb.n_iter[b])
+            out[(mi, pi)] = m
+    return out
+
+
+def prewarm_plans(contexts: Sequence[MixContext],
+                  tokens: Sequence[str]) -> int:
+    """Batch-solve the class-derived planning LPs the given policy tokens
+    will need and stuff every :class:`MixContext` plan cache, so the
+    per-cell ``ctx.plan(...)`` lookups never fall back to the serial
+    simplex (``spec.extra["batch_plans"]`` turns this on in the runner).
+
+    Returns the number of (mix, kind) plans solved.  Trace-derived plans
+    (``MixContext.trace_plan``) are per-``n`` and stay on the oracle
+    path.
+    """
+    from repro.core.planning_batch import solve_plan_batch
+
+    kinds = set()
+    for token in tokens:
+        name, _ = parse_policy_token(token)
+        if name in LP_TOKEN_KINDS:
+            kinds.add(LP_TOKEN_KINDS[name])
+        elif name in ("sli_aware", "sli_aware_general"):
+            kinds.add("sli")
+        elif name in ("prioritize_and_route", "gate_and_route_separate"):
+            kinds.add("separate")
+        else:  # gate_and_route / ablations / system baselines
+            kinds.add("base")
+    todo = [(ctx, kind) for kind in sorted(kinds) for ctx in contexts
+            if ctx.mix.classes and kind not in ctx._plans]
+    for kind in sorted({k for _, k in todo}):
+        group = [ctx for ctx, k in todo if k == kind]
+        objective, sli = PLAN_KINDS[kind]
+        pb = solve_plan_batch(
+            [ctx.classes for ctx in group],
+            prims=[ctx.prim for ctx in group],
+            pricings=[ctx.pricing for ctx in group],
+            objective=objective,
+            sli=sli).require_converged(f"prewarm_plans[{kind}]")
+        for b, ctx in enumerate(group):
+            ctx._plans[kind] = pb.solution(b)
+    return len(todo)
 
 
 # ---------------------------------------------------------------------------

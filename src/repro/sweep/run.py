@@ -112,7 +112,8 @@ def build_spec(args) -> SweepSpec:
 def summarize(result: SweepResult) -> str:
     spec = result.spec
     rows = []
-    key = "revenue_rate" if spec.evaluator != "lp" else "revenue"
+    key = ("revenue" if spec.evaluator in ("lp", "lp_jax")
+           else "revenue_rate")
     for mix in spec.mixes:
         for token in spec.policies:
             for n in spec.n_servers:
@@ -152,8 +153,8 @@ def main(argv=None) -> int:
     ap.add_argument("--seed", type=int, default=0,
                     help="master entropy for the per-cell streams")
     ap.add_argument("--evaluator", default="ctmc",
-                    choices=("ctmc", "ctmc_jax", "fluid", "lp", "engine",
-                             "engine_jax"))
+                    choices=("ctmc", "ctmc_jax", "fluid", "lp", "lp_jax",
+                             "engine", "engine_jax"))
     ap.add_argument("--mix", default=None, choices=sorted(MIX_PRESETS),
                     help="workload-mix preset (default two_class; "
                          "mutually exclusive with --scenarios)")

@@ -14,7 +14,8 @@ from typing import Callable, Optional
 
 from .evaluators import (MixContext, evaluate_ctmc_cells,
                          evaluate_ctmc_jax_cells, evaluate_engine_cell,
-                         evaluate_engine_jax_cells, evaluate_lp_cell)
+                         evaluate_engine_jax_cells, evaluate_lp_cell,
+                         evaluate_lp_jax_grid, prewarm_plans)
 from .spec import CellResult, SweepResult, SweepSpec, cell_seed_sequence
 
 __all__ = ["run_sweep"]
@@ -28,13 +29,21 @@ def run_sweep(spec: SweepSpec,
     contexts = [MixContext(mix, spec) for mix in spec.mixes]
     cells: list = []
 
-    if spec.evaluator == "fluid":
-        from .fluid_batch import evaluate_fluid_grid
+    if spec.evaluator in ("fluid", "lp_jax"):
+        # grid-batched deterministic evaluators: one vmapped solve for the
+        # whole (mix x policy) plane, replicated over the (n, seed) axes
+        if spec.evaluator == "fluid":
+            from .fluid_batch import evaluate_fluid_grid
 
-        dt = float(spec.extra.get("dt", 2e-3))
-        say(f"[{spec.name}] fluid: vmap-integrating "
-            f"{len(contexts) * len(spec.policies)} instances")
-        grid = evaluate_fluid_grid(contexts, spec.policies, spec.horizon, dt)
+            dt = float(spec.extra.get("dt", 2e-3))
+            say(f"[{spec.name}] fluid: vmap-integrating "
+                f"{len(contexts) * len(spec.policies)} instances")
+            grid = evaluate_fluid_grid(contexts, spec.policies,
+                                       spec.horizon, dt)
+        else:
+            say(f"[{spec.name}] lp_jax: batch-solving "
+                f"{len(contexts) * len(spec.policies)} planning LPs")
+            grid = evaluate_lp_jax_grid(contexts, spec.policies, spec.extra)
         for mi, ctx in enumerate(contexts):
             for pi, token in enumerate(spec.policies):
                 metrics = grid[(mi, pi)]
@@ -43,6 +52,12 @@ def run_sweep(spec: SweepSpec,
                         cells.append(CellResult(ctx.mix.name, token, n, si,
                                                 dict(metrics)))
     else:
+        if spec.extra.get("batch_plans"):
+            # one vmapped interior-point run replaces the per-mix serial
+            # simplex solves the cell evaluators would otherwise trigger
+            solved = prewarm_plans(contexts, spec.policies)
+            say(f"[{spec.name}] prewarmed {solved} planning LPs "
+                f"(batch_plans)")
         # extra["crn_policies"]: common random numbers across the policy
         # axis -- every policy sees the same per-(mix, n, seed) streams,
         # turning policy comparisons into paired comparisons (the EC.8.6

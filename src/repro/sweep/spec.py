@@ -4,9 +4,10 @@ A sweep evaluates the cross product
 
     workload mix  x  policy  x  cluster size n  x  seed replication
 
-under one of six evaluators (aggregate CTMC, its vmapped uniformized JAX
-twin, vmapped fluid ODE, planning LP, per-server trace engine, and the
-trace engine's vmapped JAX twin) and emits a single JSON artifact that
+under one of seven evaluators (aggregate CTMC, its vmapped uniformized
+JAX twin, vmapped fluid ODE, planning LP, the planning LP's vmapped
+interior-point twin, per-server trace engine, and the trace engine's
+vmapped JAX twin) and emits a single JSON artifact that
 every benchmark shares.  Randomness is fully determined by ``SweepSpec.seed``:
 each grid cell derives its own :class:`numpy.random.SeedSequence` from the
 cell's *coordinates*, so results are independent of iteration order and
@@ -39,7 +40,8 @@ __all__ = [
 ]
 
 SCHEMA_VERSION = 1
-EVALUATORS = ("ctmc", "ctmc_jax", "fluid", "lp", "engine", "engine_jax")
+EVALUATORS = ("ctmc", "ctmc_jax", "fluid", "lp", "lp_jax", "engine",
+              "engine_jax")
 
 
 class SweepSchemaError(ValueError):

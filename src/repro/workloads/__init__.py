@@ -20,7 +20,7 @@ from .arrivals import (ArrivalProcess, MMPPArrivals,
                        PiecewiseConstantArrivals, PoissonArrivals, diurnal,
                        flash_crowd, rate_shift)
 from .closed_loop import (VARIANTS, ClosedLoopConfig, compare_policies,
-                          run_closed_loop)
+                          plans_for_scenarios, run_closed_loop)
 from .scenarios import (CapacityEvent, Scenario, ScenarioError, get_scenario,
                         list_scenarios, register_scenario)
 
@@ -42,4 +42,5 @@ __all__ = [
     "VARIANTS",
     "run_closed_loop",
     "compare_policies",
+    "plans_for_scenarios",
 ]

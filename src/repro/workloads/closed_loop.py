@@ -46,7 +46,7 @@ from repro.serving.engine_sim import ClusterEngine, EngineConfig
 from .scenarios import Scenario, get_scenario
 
 __all__ = ["ClosedLoopConfig", "VARIANTS", "run_closed_loop",
-           "compare_policies"]
+           "compare_policies", "plans_for_scenarios"]
 
 VARIANTS = ("adaptive", "static", "static_cold", "vllm", "sarathi")
 
@@ -88,16 +88,55 @@ def _classes_from_means(means, n: int, theta: float,
     ]
 
 
-def _plans(scn: Scenario, trace, cfg: ClosedLoopConfig, prim, pricing):
-    """(cold classes, cold plan, hindsight classes, hindsight plan)."""
+def _plan_classes(scn: Scenario, trace, cfg: ClosedLoopConfig):
+    """(cold-start classes, hindsight classes) for one scenario replay."""
     I, names = scn.n_classes, scn.class_names
     n = cfg.n_servers
     windows = trace_class_means_windowed(trace, I, cfg.cold_window)
     cold_cls = _classes_from_means(windows[0][2], n, cfg.planner_theta, names)
     full_cls = _classes_from_means(trace_class_means(trace, I), n,
                                    cfg.planner_theta, names)
+    return cold_cls, full_cls
+
+
+def _plans(scn: Scenario, trace, cfg: ClosedLoopConfig, prim, pricing):
+    """(cold classes, cold plan, hindsight classes, hindsight plan)."""
+    cold_cls, full_cls = _plan_classes(scn, trace, cfg)
     return (cold_cls, solve_bundled_lp(cold_cls, prim, pricing),
             full_cls, solve_bundled_lp(full_cls, prim, pricing))
+
+
+def plans_for_scenarios(scenarios: Sequence, traces: Sequence,
+                        cfgs: Sequence[ClosedLoopConfig],
+                        prim: Optional[ServicePrimitives] = None,
+                        pricing: Optional[Pricing] = None) -> list:
+    """Cold-start + hindsight plans for MANY scenario replays in ONE
+    batched interior-point solve (:func:`repro.core.planning_batch.
+    solve_plan_batch`; class counts may differ across scenarios -- the
+    batch pads internally).
+
+    Returns one :func:`_plans`-shaped tuple per scenario, ready to pass
+    to :func:`run_closed_loop` / :func:`compare_policies` via ``plans=``.
+    ``bench_scenarios`` uses this to stop the registry-wide closed-loop
+    table from serialising 2 x n_scenarios simplex solves.
+    """
+    prim = prim or ServicePrimitives()
+    pricing = pricing or Pricing()
+    scenarios = [get_scenario(s) if isinstance(s, str) else s
+                 for s in scenarios]
+    if not (len(scenarios) == len(traces) == len(cfgs)):
+        raise ValueError("scenarios/traces/cfgs must align")
+    pairs = [_plan_classes(scn, trace, cfg)
+             for scn, trace, cfg in zip(scenarios, traces, cfgs)]
+    from repro.core.planning_batch import solve_plan_batch
+
+    pb = solve_plan_batch(
+        [cls for pair in pairs for cls in pair], prim,
+        pricing).require_converged("plans_for_scenarios")
+    return [
+        (cold, pb.solution(2 * k), full, pb.solution(2 * k + 1))
+        for k, (cold, full) in enumerate(pairs)
+    ]
 
 
 def run_closed_loop(scenario, variant: str = "adaptive",
@@ -163,22 +202,27 @@ def compare_policies(scenario, cfg: ClosedLoopConfig = ClosedLoopConfig(),
                      variants: Sequence[str] = ("adaptive", "static",
                                                 "static_cold", "vllm"),
                      prim: Optional[ServicePrimitives] = None,
-                     pricing: Optional[Pricing] = None) -> dict:
+                     pricing: Optional[Pricing] = None,
+                     trace=None, plans=None) -> dict:
     """All variants on ONE generated trace (paired by construction).
 
     Returns ``{"scenario", "n", "horizon", "n_requests", "variants":
     {name: metrics}, "adaptive_lead_pct": ...}`` where the lead is the
     adaptive variant's revenue-rate advantage over the hindsight static
-    plan (positive = closed loop wins).
+    plan (positive = closed loop wins).  Pass ``trace`` / ``plans``
+    (from :func:`plans_for_scenarios`) when comparing many scenarios:
+    the plan solves then run as one batch instead of per call.
     """
     if isinstance(scenario, str):
         scenario = get_scenario(scenario)
     prim = prim or ServicePrimitives()
     pricing = pricing or Pricing()
-    trace = scenario.generate(seed=cfg.seed, horizon=cfg.horizon,
-                              compression=cfg.compression,
-                              rate_scale=cfg.rate_scale)
-    plans = _plans(scenario, trace, cfg, prim, pricing)
+    if trace is None:
+        trace = scenario.generate(seed=cfg.seed, horizon=cfg.horizon,
+                                  compression=cfg.compression,
+                                  rate_scale=cfg.rate_scale)
+    if plans is None:
+        plans = _plans(scenario, trace, cfg, prim, pricing)
     res = {
         v: run_closed_loop(scenario, v, cfg, prim=prim, pricing=pricing,
                            trace=trace, plans=plans)

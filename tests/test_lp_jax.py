@@ -1,0 +1,305 @@
+"""Deterministic oracle-agreement tests for the batched LP/planning stack.
+
+``repro.core.lp_jax`` (fixed-iteration interior point) and
+``repro.core.planning_batch`` (stacked Eq. 40/42 assembly) are held to
+the serial simplex oracle (``linprog_max`` / ``solve_plan``) on the full
+planning test corpus, within the tolerance documented in
+``docs/PLANNING.md``: relative 1e-6 on objectives, same-scale primal
+feasibility.  Vertices are NOT compared -- degenerate LPs have alternate
+optima and the IPM returns a face-interior point.
+
+Hypothesis-based property tests live in
+``tests/test_lp_jax_properties.py`` (whole-module importorskip) so this
+module still runs where hypothesis is absent; the sweep-evaluator
+integration test is ``sim``-marked with the other jax-engine tests.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.lp import linprog_max
+from repro.core.lp_jax import linprog_max_jax, solve_lp_batch
+from repro.core.planning import SLISpec, solve_bundled_lp, solve_plan
+from repro.core.planning_batch import solve_plan_batch, solve_plan_jax
+from repro.core.types import (Pricing, ServicePrimitives, WorkloadClass,
+                              rate_arrays)
+
+REL_TOL = 1e-6  # documented objective tolerance vs the oracle
+
+# the EC.8.5 synthetic instance anchoring the planning corpus
+C0 = WorkloadClass("decode_heavy", 300, 1000, 0.5, 0.1)
+C1 = WorkloadClass("prefill_heavy", 3000, 400, 0.5, 0.1)
+PRIM = ServicePrimitives()
+PRICE = Pricing(c_p=0.1, c_d=0.2)
+
+# (label, solve_plan kwargs): every SLI structure the planner supports
+PLAN_CORPUS = [
+    ("bundled", dict(objective="bundled")),
+    ("separate", dict(objective="separate")),
+    ("pin_qd", dict(sli=SLISpec(pin_zero_decode_queue=True))),
+    ("tpot_cap", dict(sli=SLISpec(tpot_cap=0.024))),
+    ("prefill_cap", dict(sli=SLISpec(prefill_fairness_cap=0.01))),
+    ("decode_cap", dict(sli=SLISpec(decode_fairness_cap=0.5))),
+    ("prefill_pen", dict(sli=SLISpec(prefill_fairness_penalty=1e4))),
+    ("both_pen", dict(sli=SLISpec(prefill_fairness_penalty=100.0,
+                                  decode_fairness_penalty=10.0))),
+]
+
+
+def rel_err(a, b):
+    return abs(a - b) / (1.0 + abs(a))
+
+
+def check_plan_feasible(plan, tol=1e-6):
+    arr = rate_arrays(plan.classes, plan.prim)
+    B = plan.prim.batch_cap
+    assert plan.x.sum() <= 1 + tol
+    assert plan.ym.sum() <= (B - 1) * plan.x.sum() + tol
+    assert plan.ys.sum() <= B * (1 - plan.x.sum()) + tol
+    np.testing.assert_allclose(
+        arr["mu_p"] * plan.x + arr["theta"] * plan.qp, arr["lam"],
+        atol=1e-5)
+    np.testing.assert_allclose(
+        arr["mu_p"] * plan.x - arr["theta"] * plan.qd,
+        arr["mu_m"] * plan.ym + arr["mu_s"] * plan.ys, atol=1e-5)
+    for v in (plan.x, plan.ym, plan.ys, plan.qp, plan.qd):
+        assert np.all(v >= -tol)
+
+
+def test_textbook_lp_matches_oracle():
+    # max 3x + 5y s.t. x <= 4, 2y <= 12, 3x + 2y <= 18 -> (2, 6), obj 36
+    res = linprog_max_jax(c=[3, 5], A_ub=[[1, 0], [0, 2], [3, 2]],
+                          b_ub=[4, 12, 18])
+    assert bool(res.converged)
+    assert res.fun == pytest.approx(36.0, abs=1e-6)
+    assert res.x == pytest.approx([2.0, 6.0], abs=1e-6)
+    assert res.dual_ub == pytest.approx([0.0, 1.5, 1.0], abs=1e-6)
+
+
+def test_equality_lp_matches_oracle():
+    res = linprog_max_jax(c=[1, 2], A_eq=[[1, 1]], b_eq=[1])
+    assert bool(res.converged)
+    assert res.fun == pytest.approx(2.0, abs=1e-6)
+    assert res.dual_eq == pytest.approx([2.0], abs=1e-6)
+
+
+def test_redundant_equality_rows_still_converge():
+    res = linprog_max_jax(c=[1, 1], A_ub=[[1, 0]], b_ub=[0.25],
+                          A_eq=[[1, 1], [2, 2]], b_eq=[1, 2])
+    assert bool(res.converged)
+    assert res.fun == pytest.approx(1.0, abs=1e-6)
+
+
+def test_batch_values_match_per_instance_solves():
+    rng = np.random.default_rng(7)
+    n, m, S = 4, 3, 8
+    cs, As, bs = [], [], []
+    for _ in range(S):
+        cs.append(rng.normal(size=n))
+        As.append(np.vstack([rng.normal(size=(m, n)), np.ones((1, n))]))
+        bs.append(np.concatenate([rng.uniform(0.5, 2.0, size=m), [5.0]]))
+    res = solve_lp_batch(np.stack(cs), np.stack(As), np.stack(bs))
+    assert res.converged.all()
+    for k in range(S):
+        ref = linprog_max(cs[k], As[k], bs[k])
+        assert rel_err(ref.fun, res.fun[k]) < REL_TOL
+        # strong duality holds batched too
+        assert rel_err(res.fun[k],
+                       float(bs[k] @ res.dual_ub[k])) < 1e-5
+
+
+@pytest.mark.parametrize("label,kw", PLAN_CORPUS)
+def test_planning_corpus_agrees_with_oracle(label, kw):
+    oracle = solve_plan([C0, C1], PRIM, PRICE, **kw)
+    pb = solve_plan_batch([(C0, C1)], PRIM, PRICE, **kw)
+    assert bool(pb.converged[0]), (label, pb.primal_res, pb.dual_res)
+    sol = pb.solution(0)
+    assert rel_err(oracle.revenue_rate, sol.revenue_rate) < REL_TOL
+    assert rel_err(oracle.sli_value, sol.sli_value) < 1e-4
+    check_plan_feasible(sol)
+
+
+def test_mixed_class_counts_pad_and_agree():
+    inst1 = (C0,)
+    inst3 = (C0, C1, WorkloadClass("mid", 800, 600, 0.3, 0.05))
+    pb = solve_plan_batch([(C0, C1), inst3, inst1], PRIM, PRICE)
+    assert pb.converged.all()
+    for k, inst in enumerate([(C0, C1), inst3, inst1]):
+        oracle = solve_bundled_lp(inst, PRIM, PRICE)
+        sol = pb.solution(k)
+        assert len(sol.x) == len(inst)  # padding sliced off
+        assert rel_err(oracle.revenue_rate, sol.revenue_rate) < REL_TOL
+        check_plan_feasible(sol)
+
+
+def test_padded_instances_with_fairness_caps_agree():
+    """Regression: pairwise fairness rows must never anchor on the pad
+    filler class (x_pad ~ 0 would turn x_i - x_pad <= cap into an
+    absolute cap the unpadded LP does not have)."""
+    sli = SLISpec(prefill_fairness_cap=0.05)
+    inst3 = (C0, C1, WorkloadClass("mid", 800, 600, 0.3, 0.05))
+    pb = solve_plan_batch([(C0, C1), inst3], PRIM, PRICE, sli=sli)
+    assert pb.converged.all()
+    for k, inst in enumerate([(C0, C1), inst3]):
+        oracle = solve_bundled_lp(inst, PRIM, PRICE, sli=sli)
+        assert rel_err(oracle.revenue_rate, pb.revenue_rate[k]) < REL_TOL
+    # penalty aux columns must not see the pad either
+    sli_pen = SLISpec(prefill_fairness_penalty=100.0)
+    pb = solve_plan_batch([(C0, C1), inst3], PRIM, PRICE, sli=sli_pen)
+    assert pb.converged.all()
+    for k, inst in enumerate([(C0, C1), inst3]):
+        oracle = solve_bundled_lp(inst, PRIM, PRICE, sli=sli_pen)
+        assert rel_err(oracle.revenue_rate, pb.revenue_rate[k]) < REL_TOL
+
+
+def test_solve_plan_jax_raises_on_infeasible_instance():
+    """Regression: the jitted path must not publish a garbage plan where
+    the simplex oracle raises (converged flag funnels into LPInfeasible)."""
+    from repro.core.lp import LPInfeasible
+
+    hot = (WorkloadClass("hot", 300, 1000, 50.0, 0.0),)
+    with pytest.raises(LPInfeasible):
+        solve_plan((list(hot)), PRIM, PRICE)  # oracle behaviour
+    with pytest.raises(LPInfeasible, match="did not converge"):
+        solve_plan_jax(hot, PRIM, PRICE)
+
+
+def test_prewarm_plans_covers_gate_and_route_separate():
+    """Regression: the separate-plan token must prewarm the 'separate'
+    kind, or batch_plans sweeps fall back to the serial simplex."""
+    from repro.sweep.evaluators import MixContext, prewarm_plans
+    from repro.sweep.run import default_mix
+    from repro.sweep.spec import SweepSpec
+
+    mix = default_mix("two_class")
+    ctx = MixContext(mix, SweepSpec(mixes=(mix,)))
+    prewarm_plans([ctx], ["gate_and_route_separate"])
+    assert "separate" in ctx._plans
+    oracle = solve_plan(ctx.classes, ctx.prim, ctx.pricing,
+                        objective="separate")
+    assert rel_err(oracle.revenue_rate,
+                   ctx._plans["separate"].revenue_rate) < REL_TOL
+
+
+def test_batched_sli_caps_trace_the_frontier():
+    caps = np.linspace(1e-4, 2.0, 7)
+    pb = solve_plan_batch([(C0, C1)] * len(caps), PRIM, PRICE,
+                          sli=SLISpec(decode_fairness_cap=caps))
+    assert pb.converged.all()
+    for k, cap in enumerate(caps):
+        oracle = solve_bundled_lp(
+            (C0, C1), PRIM, PRICE, sli=SLISpec(decode_fairness_cap=float(cap)))
+        assert rel_err(oracle.revenue_rate, pb.revenue_rate[k]) < REL_TOL
+    # revenue is nondecreasing in the cap (weaker constraint)
+    assert np.all(np.diff(pb.revenue_rate) >= -1e-6)
+
+
+def test_capacity_and_pricing_axes():
+    pricings = [Pricing(0.1, 0.2), Pricing(0.2, 0.1), Pricing(0.05, 0.4)]
+    caps = [1.0, 0.5, 2.0]
+    pb = solve_plan_batch([(C0, C1)] * 3, PRIM, pricings=pricings,
+                          capacity=caps)
+    assert pb.converged.all()
+    for k in range(3):
+        oracle = solve_plan((C0, C1), PRIM, pricings[k], capacity=caps[k])
+        assert rel_err(oracle.revenue_rate, pb.revenue_rate[k]) < REL_TOL
+
+
+def test_solve_plan_jax_is_plan_solution_compatible():
+    sol = solve_plan_jax((C0, C1), PRIM, PRICE)
+    oracle = solve_bundled_lp((C0, C1), PRIM, PRICE)
+    assert rel_err(oracle.revenue_rate, sol.revenue_rate) < REL_TOL
+    assert sol.mixed_servers(10) == oracle.mixed_servers(10)
+    probs = sol.solo_probs()
+    assert probs.shape == (2,) and np.all((0 <= probs) & (probs <= 1))
+
+
+def test_online_controller_lp_jax_solver_matches_simplex():
+    from repro.core.online import OnlineController, OnlineControllerConfig
+
+    plans = {}
+    for solver in ("simplex", "lp_jax"):
+        rng = np.random.default_rng(3)
+        ctl = OnlineController(
+            (C0, C1), PRIM, PRICE, n=10,
+            config=OnlineControllerConfig(solver=solver))
+        for t in np.sort(rng.uniform(0, 20, 300)):
+            ctl.observe_arrival(float(t), int(rng.integers(0, 2)))
+        plans[solver] = ctl.replan(20.0)
+    a, b = plans["simplex"], plans["lp_jax"]
+    assert rel_err(a.revenue_rate, b.revenue_rate) < REL_TOL
+    np.testing.assert_allclose(a.x, b.x, atol=1e-5)
+    assert a.mixed_servers(10) == b.mixed_servers(10)
+
+
+def test_online_controller_rejects_unknown_solver():
+    from repro.core.online import OnlineControllerConfig
+
+    with pytest.raises(ValueError, match="solver"):
+        OnlineControllerConfig(solver="gurobi")
+
+
+def test_replan_controllers_batch_matches_serial_replans():
+    import copy
+
+    from repro.core.online import (OnlineController, OnlineControllerConfig,
+                                   replan_controllers_batch)
+
+    rng = np.random.default_rng(11)
+    ctls = []
+    for k in range(3):
+        ctl = OnlineController((C0, C1), PRIM, PRICE, n=8,
+                               config=OnlineControllerConfig())
+        for t in np.sort(rng.uniform(0, 15, 80 + 60 * k)):
+            ctl.observe_arrival(float(t), int(rng.integers(0, 2)))
+        ctls.append(ctl)
+    refs = [copy.deepcopy(c) for c in ctls]
+    plans = replan_controllers_batch(ctls, 15.0)
+    assert len(plans) == 3
+    for ctl, ref in zip(ctls, refs):
+        ref.replan(15.0)
+        assert ctl.replan_count == 1
+        assert ctl._next_replan >= 15.0 + ctl.cfg.replan_every
+        assert rel_err(ref.plan.revenue_rate,
+                       ctl.plan.revenue_rate) < REL_TOL
+
+
+def test_gate_and_route_separate_token_resolves():
+    """bench_optimality_gap's separate-scheme policy: the plan-tracking
+    occupancy gate built from the Eq. 42 plan, charged separately."""
+    from repro.sweep.evaluators import MixContext, resolve_policy
+    from repro.sweep.run import default_mix
+    from repro.sweep.spec import SweepSpec
+
+    mix = default_mix("two_class")
+    ctx = MixContext(mix, SweepSpec(mixes=(mix,)))
+    pol = resolve_policy("gate_and_route_separate", ctx, n=10)
+    assert pol.charging == "separate"
+    assert pol.plan.objective == "separate"
+    np.testing.assert_allclose(pol.gate.x_star, ctx.plan("separate").x)
+
+
+@pytest.mark.sim
+def test_lp_jax_sweep_evaluator_matches_lp_evaluator():
+    from repro.sweep import SweepSpec, run_sweep
+    from repro.sweep.run import default_mix
+
+    mixes = (default_mix("two_class"),)
+    tokens = ("lp", "lp_separate", "lp_sli")
+    ref = run_sweep(SweepSpec(name="ref", evaluator="lp", policies=tokens,
+                              n_servers=(10,), n_seeds=2, mixes=mixes))
+    got = run_sweep(SweepSpec(name="got", evaluator="lp_jax",
+                              policies=tokens, n_servers=(10,), n_seeds=2,
+                              mixes=mixes))
+    assert len(got.cells) == len(ref.cells) == len(tokens) * 2
+    for ca, cb in zip(ref.cells, got.cells):
+        assert (ca.mix, ca.policy, ca.n, ca.seed) == (
+            cb.mix, cb.policy, cb.n, cb.seed)
+        assert cb.metrics["lp_converged"] == 1.0
+        assert cb.metrics["lp_gap"] < 1e-8
+        for key in ("revenue", "tpot", "x_total"):
+            assert rel_err(ca.metrics[key], cb.metrics[key]) < 1e-5, key
+    # artifact round-trips through the published schema
+    from repro.sweep.spec import validate_payload
+
+    validate_payload(got.to_payload())

@@ -1,0 +1,96 @@
+"""Hypothesis property tests: lp_jax vs the simplex oracle.
+
+Randomized feasible planning instances and general feasible-bounded LPs
+must agree with ``linprog_max`` / ``solve_plan`` within the tolerance
+documented in ``docs/PLANNING.md`` (relative 1e-6 on objectives).
+Separate module from ``tests/test_lp_jax.py`` so the deterministic
+corpus checks still run where hypothesis is absent (this whole module
+importorskips, the ``tests/test_traces_tensor.py`` pattern).
+"""
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis")  # property tests need hypothesis; skip where absent
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.lp import linprog_max  # noqa: E402
+from repro.core.lp_jax import linprog_max_jax  # noqa: E402
+from repro.core.planning import SLISpec, solve_bundled_lp  # noqa: E402
+from repro.core.planning_batch import solve_plan_batch  # noqa: E402
+from repro.core.types import (Pricing, ServicePrimitives,  # noqa: E402
+                              WorkloadClass, rate_arrays)
+
+PRICE = Pricing(c_p=0.1, c_d=0.2)
+REL_TOL = 1e-6
+
+
+def rel_err(a, b):
+    return abs(a - b) / (1.0 + abs(a))
+
+
+@st.composite
+def planning_instances(draw):
+    """The randomized feasible instance family of tests/test_planning.py."""
+    I = draw(st.integers(1, 4))
+    classes = []
+    for i in range(I):
+        P = draw(st.floats(50, 4000))
+        D = draw(st.floats(20, 2000))
+        lam = draw(st.floats(0.01, 1.5))
+        th = draw(st.floats(0.01, 0.5))
+        classes.append(WorkloadClass(f"c{i}", P, D, lam, th))
+    B = draw(st.integers(4, 32))
+    return classes, ServicePrimitives(batch_cap=B)
+
+
+@settings(max_examples=25, deadline=None)
+@given(planning_instances())
+def test_planner_matches_oracle_on_random_instances(inst):
+    classes, prim = inst
+    oracle = solve_bundled_lp(classes, prim, PRICE)
+    pb = solve_plan_batch([classes], prim, PRICE)
+    assert bool(pb.converged[0]), (pb.primal_res, pb.dual_res, pb.gap)
+    sol = pb.solution(0)
+    assert rel_err(oracle.revenue_rate, sol.revenue_rate) < REL_TOL
+    # primal feasibility of the batched solution at the same scale
+    arr = rate_arrays(classes, prim)
+    np.testing.assert_allclose(
+        arr["mu_p"] * sol.x + arr["theta"] * sol.qp, arr["lam"], atol=1e-5)
+    assert sol.x.sum() <= 1 + 1e-6
+    for v in (sol.x, sol.ym, sol.ys, sol.qp, sol.qd):
+        assert np.all(v >= -1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(planning_instances())
+def test_planner_pin_matches_oracle(inst):
+    """Proposition 1's pinned variant solves to the same tolerance."""
+    classes, prim = inst
+    sli = SLISpec(pin_zero_decode_queue=True)
+    oracle = solve_bundled_lp(classes, prim, PRICE, sli=sli)
+    pb = solve_plan_batch([classes], prim, PRICE, sli=sli)
+    assert bool(pb.converged[0])
+    assert rel_err(oracle.revenue_rate, pb.revenue_rate[0]) < REL_TOL
+    assert np.all(np.abs(pb.solution(0).qd) < 1e-6)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_general_lps_match_oracle_and_strong_duality(data):
+    """Feasible-bounded random LPs (the tests/test_lp.py family)."""
+    n = data.draw(st.integers(2, 5))
+    m = data.draw(st.integers(1, 4))
+    rng = np.random.default_rng(data.draw(st.integers(0, 2**32 - 1)))
+    c = rng.normal(size=n)
+    A = np.vstack([rng.normal(size=(m, n)), np.ones((1, n))])
+    b = np.concatenate([rng.uniform(0.5, 2.0, size=m), [5.0]])
+    ref = linprog_max(c, A, b)
+    got = linprog_max_jax(c, A, b)
+    assert bool(got.converged), (got.primal_res, got.dual_res, got.gap)
+    assert rel_err(ref.fun, got.fun) < REL_TOL
+    # primal feasibility + strong duality of the IPM point
+    assert np.all(A @ got.x <= b + 1e-6)
+    assert np.all(got.x >= -1e-8)
+    assert rel_err(got.fun, float(b @ got.dual_ub)) < 1e-5

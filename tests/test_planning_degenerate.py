@@ -1,0 +1,120 @@
+"""Regression tests: simplex anti-cycling + degenerate planner inputs.
+
+No hypothesis dependency -- these must run everywhere (the cycling and
+degenerate-input fixes are exactly the paths a stripped container still
+exercises through the closed-loop harness).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.lp import LPInfeasible, linprog_max
+from repro.core.planning import (solve_bundled_lp, solve_plan,
+                                 validate_planning_instance)
+from repro.core.planning_batch import solve_plan_batch
+from repro.core.types import Pricing, ServicePrimitives, WorkloadClass
+
+PRIM = ServicePrimitives()
+PRICE = Pricing(c_p=0.1, c_d=0.2)
+C0 = WorkloadClass("decode_heavy", 300, 1000, 0.5, 0.1)
+C1 = WorkloadClass("prefill_heavy", 3000, 400, 0.5, 0.1)
+
+
+# ---------------------------------------------------------------------------
+# Simplex cycling safety (Bland fallback after a pivot-count threshold)
+# ---------------------------------------------------------------------------
+
+
+def test_beale_cycling_instance_terminates_optimal():
+    """Beale's classic example cycles forever under pure Dantzig with
+    tie-breaking by lowest index; the Bland fallback must terminate it
+    at the true optimum."""
+    c = [0.75, -150.0, 0.02, -6.0]
+    A_ub = [
+        [0.25, -60.0, -1.0 / 25.0, 9.0],
+        [0.5, -90.0, -1.0 / 50.0, 3.0],
+        [0.0, 0.0, 1.0, 0.0],
+    ]
+    b_ub = [0.0, 0.0, 1.0]
+    res = linprog_max(c, A_ub, b_ub)
+    assert res.fun == pytest.approx(0.05, abs=1e-9)
+    assert res.x[2] == pytest.approx(1.0, abs=1e-9)
+
+
+def test_bland_threshold_forces_termination():
+    """Even with an immediate Bland switch (threshold 0) the solver must
+    reach the same optimum -- the safety valve may cost pivots, never
+    correctness."""
+    res = linprog_max(
+        c=[3, 5], A_ub=[[1, 0], [0, 2], [3, 2]], b_ub=[4, 12, 18],
+        bland_after=0)
+    assert res.fun == pytest.approx(36.0)
+    assert res.x == pytest.approx([2.0, 6.0])
+
+
+def test_degenerate_planning_lp_still_exact():
+    """A degenerate planning instance (two identical classes splitting
+    one flow) keeps terminating and agreeing with the offered load."""
+    twin = [WorkloadClass("a", 300, 1000, 0.25, 0.1),
+            WorkloadClass("b", 300, 1000, 0.25, 0.1)]
+    plan = solve_bundled_lp(twin, PRIM, PRICE)
+    offered = sum(PRICE.bundled_reward(c) * c.arrival_rate for c in twin)
+    assert plan.revenue_rate <= offered + 1e-6
+    assert plan.revenue_rate > 0
+
+
+# ---------------------------------------------------------------------------
+# Degenerate planner inputs -> diagnostic LPInfeasible (never a crash)
+# ---------------------------------------------------------------------------
+
+
+def test_empty_class_list_raises_diagnostic():
+    with pytest.raises(LPInfeasible, match="empty class list"):
+        solve_plan([], PRIM, PRICE)
+
+
+def test_all_zero_arrival_rates_raise_diagnostic():
+    dead = [WorkloadClass("z0", 300, 1000, 0.0, 0.1),
+            WorkloadClass("z1", 3000, 400, 0.0, 0.1)]
+    with pytest.raises(LPInfeasible, match="arrival rates are zero"):
+        solve_plan(dead, PRIM, PRICE)
+
+
+def test_single_class_zero_rate_raises_but_positive_rate_solves():
+    with pytest.raises(LPInfeasible, match="arrival rates are zero"):
+        solve_plan([WorkloadClass("z", 300, 1000, 0.0, 0.1)], PRIM, PRICE)
+    plan = solve_plan([C0], PRIM, PRICE)  # I = 1 is NOT degenerate
+    assert plan.revenue_rate > 0
+
+
+def test_zero_capacity_raises_diagnostic():
+    with pytest.raises(LPInfeasible, match="zero service capacity"):
+        solve_plan([C0, C1], PRIM, PRICE, capacity=0.0)
+
+
+def test_overload_with_zero_patience_reports_pinned_occupancy():
+    """theta = 0 pins x_i = lam_i / mu_p_i; an overloaded pin must raise
+    with the instance numbers in the message, not a bare residual."""
+    hot = [WorkloadClass("hot", 300, 1000, 50.0, 0.0)]
+    with pytest.raises(LPInfeasible, match="pinned prefill"):
+        solve_plan(hot, PRIM, PRICE)
+
+
+def test_batch_validation_names_the_offending_instance():
+    dead = [WorkloadClass("z", 300, 1000, 0.0, 0.1)]
+    with pytest.raises(LPInfeasible, match=r"batch\[1\]"):
+        solve_plan_batch([[C0, C1], dead], PRIM, PRICE)
+
+
+def test_validate_planning_instance_passes_healthy_inputs():
+    classes = validate_planning_instance([C0, C1], capacity=2.0)
+    assert classes == (C0, C1)
+
+
+def test_capacity_scales_the_plan():
+    base = solve_plan([C0, C1], PRIM, PRICE)
+    half = solve_plan([C0, C1], PRIM, PRICE, capacity=0.5)
+    assert half.revenue_rate <= base.revenue_rate + 1e-9
+    # halving every service rate doubles the prefill occupancy needed for
+    # the same served flow, so x_total grows
+    assert half.x_total >= base.x_total - 1e-9

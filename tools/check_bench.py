@@ -1,0 +1,164 @@
+#!/usr/bin/env python3
+"""Benchmark-artifact gate: committed ``artifacts/bench/*.json`` must
+match the benchmark registry.
+
+Checks, per artifact (committed = tracked by git; falls back to the
+on-disk set outside a work tree):
+
+1. the artifact stem is a *registered* artifact name (the ``ARTIFACTS``
+   table below), and its producing ``bench_*`` module is in the
+   ``benchmarks/run.py`` suite registry and exists on disk -- so an
+   artifact cannot outlive or predate its benchmark (drift fails);
+2. artifacts marked ``committed`` exist (the repo promises them);
+3. the JSON parses to an object carrying every ``required`` key;
+4. wherever a ``budget_exhausted`` key appears (any nesting level), its
+   value is 0 -- a committed artifact produced by a truncated
+   fixed-budget simulation is a lie about the simulated horizon.
+
+Run from the repo root; CI runs this in the ``bench-smoke`` job right
+after regenerating the smoke-size artifacts.  No third-party imports.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+# artifact stem -> producing bench module + keys the suite relies on.
+# ``committed`` artifacts are tracked in git and must exist.
+ARTIFACTS = {
+    "ablations": dict(bench="bench_ablations",
+                      required=["rows", "ggsp_best"]),
+    "calibration": dict(bench="bench_calibration", required=[]),
+    "charging": dict(bench="bench_charging", required=[]),
+    "classes": dict(bench="bench_classes", required=[]),
+    "convergence": dict(bench="bench_convergence", required=["rows"]),
+    "convergence_ctmc_jax": dict(bench="bench_convergence",
+                                 required=["rows"]),
+    "ctmc_speed": dict(bench="bench_ctmc_speed", required=["speedup"]),
+    "engine_speed": dict(bench="bench_engine_speed", committed=True,
+                         required=["speedup", "iters_per_sec_jax",
+                                   "iters_per_sec_python",
+                                   "budget_exhausted"]),
+    "frontier": dict(bench="bench_frontier", required=[]),
+    "matched": dict(bench="bench_matched", required=[]),
+    "matched_jax": dict(bench="bench_matched", required=[]),
+    "optimality_gap": dict(bench="bench_optimality_gap", committed=True,
+                           required=["rows", "gap_monotone_bundled",
+                                     "gap_monotone_separate",
+                                     "r_star_agreement_rel",
+                                     "budget_exhausted"]),
+    "roofline": dict(bench="bench_roofline", required=[]),
+    "scale_sweep": dict(bench="bench_scale_sweep", required=[]),
+    "scenarios": dict(bench="bench_scenarios", committed=True,
+                      required=["scenarios", "rows",
+                                "rate_shift_adaptive_lead_pct"]),
+    "sensitivity": dict(bench="bench_sensitivity", required=[]),
+    "sli_pareto": dict(bench="bench_sli_pareto",
+                       required=["prefill_fairness", "decode_fairness",
+                                 "tpot"]),
+    "trace_replay": dict(bench="bench_trace_replay", required=[]),
+    "trace_replay_jax": dict(bench="bench_trace_replay", required=[]),
+}
+
+BENCH_RE = re.compile(r"\b(bench_\w+)\b")
+
+
+def registry_benches(root: Path) -> set:
+    """bench_* modules named by benchmarks/run.py (imports + SUITE)."""
+    return set(BENCH_RE.findall((root / "benchmarks" / "run.py").read_text()))
+
+
+def committed_artifacts(root: Path) -> list:
+    """Tracked artifacts/bench/*.json (on-disk glob outside a git tree)."""
+    try:
+        out = subprocess.run(
+            ["git", "ls-files", "artifacts/bench/*.json"],
+            cwd=root, capture_output=True, text=True, check=True).stdout
+        paths = [root / line for line in out.splitlines() if line]
+    except (OSError, subprocess.CalledProcessError):
+        paths = sorted((root / "artifacts" / "bench").glob("*.json"))
+    return [p for p in paths if p.exists()]
+
+
+def iter_budget_keys(obj, path=""):
+    if isinstance(obj, dict):
+        for k, v in obj.items():
+            sub = f"{path}.{k}" if path else str(k)
+            if k == "budget_exhausted":
+                yield sub, v
+            else:
+                yield from iter_budget_keys(v, sub)
+    elif isinstance(obj, list):
+        for i, v in enumerate(obj):
+            yield from iter_budget_keys(v, f"{path}[{i}]")
+
+
+def check(root: Path) -> list:
+    errors = []
+    benches = registry_benches(root)
+    for stem, meta in ARTIFACTS.items():
+        if meta["bench"] not in benches:
+            errors.append(
+                f"registry: artifact {stem!r} maps to {meta['bench']!r}, "
+                f"which is not in the benchmarks/run.py suite")
+        if not (root / "benchmarks" / f"{meta['bench']}.py").exists():
+            errors.append(
+                f"registry: artifact {stem!r} maps to {meta['bench']!r}, "
+                f"which has no benchmarks/{meta['bench']}.py on disk")
+        if meta.get("committed") and not (
+                root / "artifacts" / "bench" / f"{stem}.json").exists():
+            errors.append(
+                f"artifacts/bench/{stem}.json: marked committed in the "
+                f"registry but missing on disk")
+
+    seen = 0
+    for path in committed_artifacts(root):
+        rel = path.relative_to(root)
+        stem = path.stem
+        meta = ARTIFACTS.get(stem)
+        if meta is None:
+            errors.append(
+                f"{rel}: unregistered artifact stem {stem!r} -- add it to "
+                f"tools/check_bench.py ARTIFACTS or delete the file")
+            continue
+        try:
+            payload = json.loads(path.read_text())
+        except json.JSONDecodeError as exc:
+            errors.append(f"{rel}: invalid JSON ({exc})")
+            continue
+        if not isinstance(payload, dict):
+            errors.append(f"{rel}: top level must be a JSON object")
+            continue
+        for key in meta["required"]:
+            if key not in payload:
+                errors.append(f"{rel}: missing required key {key!r}")
+        for where, val in iter_budget_keys(payload):
+            if val != 0:
+                errors.append(
+                    f"{rel}: {where} = {val!r} (fixed simulation budget "
+                    f"was exhausted; regenerate at a sufficient size)")
+        seen += 1
+    if seen == 0:
+        errors.append("no committed artifacts/bench/*.json found")
+    return errors
+
+
+def main() -> int:
+    root = Path(__file__).resolve().parents[1]
+    errors = check(root)
+    for e in errors:
+        print(f"[check_bench] {e}", file=sys.stderr)
+    if errors:
+        return 1
+    n = len(committed_artifacts(root))
+    print(f"[check_bench] OK ({n} artifacts validated against "
+          f"{len(ARTIFACTS)} registered stems)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

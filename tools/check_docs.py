@@ -9,10 +9,12 @@ docs mention -- ``--evaluator <name>`` CLI examples, ``"evaluator":
 "<name>"`` JSON snippets, and ``\\`name\\` evaluator`` / ``evaluator
 \\`name\\``` prose -- against the registry (``EVALUATORS`` in
 ``repro.sweep.spec``, the names dispatched to
-``repro.sweep.evaluators``), and every ``bench_*`` module name
-``benchmarks/README.md`` mentions against the ``benchmarks/run.py``
-suite registry (same pattern as the evaluator check), so documented
-evaluators and benchmark scripts cannot silently rot.  Exits nonzero
+``repro.sweep.evaluators``), and every ``bench_*`` module name any
+scanned doc mentions against the ``benchmarks/run.py`` suite registry.
+Both cross-checks run in BOTH directions: doc-mentioned names must be
+registered, and registered evaluators / benchmark modules must be
+documented somewhere -- so documented names and registries cannot
+silently drift apart in either direction.  Exits nonzero
 with a listing of problems. Run from the repo root; CI runs this next
 to the tier-1 suite.
 """
@@ -24,8 +26,8 @@ import sys
 from pathlib import Path
 
 DOCS = ("README.md", "docs/ARCHITECTURE.md", "docs/SIMULATORS.md",
-        "docs/WORKLOADS.md", "benchmarks/README.md", "ROADMAP.md",
-        "CHANGES.md")
+        "docs/WORKLOADS.md", "docs/PLANNING.md", "benchmarks/README.md",
+        "ROADMAP.md", "CHANGES.md")
 
 LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
 
@@ -131,31 +133,52 @@ def known_benchmarks(root: Path):
 
 
 def check_benchmarks(root: Path) -> list:
-    """Every bench_* mentioned in benchmarks/README.md must be in the
-    run.py registry and exist on disk (and vice versa: registry modules
-    should be documented)."""
+    """Both directions, across every scanned doc: any bench_* a doc
+    mentions must be in the run.py registry and exist on disk, and every
+    registry module must be documented in benchmarks/README.md."""
     errors = []
     registry, err = known_benchmarks(root)
     if err:
         return [f"benchmark registry: {err}"]
-    readme = root / "benchmarks" / "README.md"
-    if not readme.exists():
-        return errors
-    mentioned = set(BENCH_RE.findall(readme.read_text()))
-    for name in sorted(mentioned - registry):
-        errors.append(
-            f"benchmarks/README.md: benchmark module {name!r} not in the "
-            f"benchmarks/run.py registry")
-    for name in sorted(mentioned):
-        if not (root / "benchmarks" / f"{name}.py").exists():
+    for rel in DOCS:
+        doc = root / rel
+        if not doc.exists():
+            continue
+        mentioned = set(BENCH_RE.findall(doc.read_text()))
+        for name in sorted(mentioned - registry):
             errors.append(
-                f"benchmarks/README.md: benchmark module {name!r} has no "
-                f"benchmarks/{name}.py on disk")
-    for name in sorted(registry - mentioned):
-        errors.append(
-            f"benchmarks/run.py: registered benchmark {name!r} is not "
-            f"documented in benchmarks/README.md")
+                f"{rel}: benchmark module {name!r} not in the "
+                f"benchmarks/run.py registry")
+        for name in sorted(mentioned):
+            if not (root / "benchmarks" / f"{name}.py").exists():
+                errors.append(
+                    f"{rel}: benchmark module {name!r} has no "
+                    f"benchmarks/{name}.py on disk")
+    readme = root / "benchmarks" / "README.md"
+    if readme.exists():
+        documented = set(BENCH_RE.findall(readme.read_text()))
+        for name in sorted(registry - documented):
+            errors.append(
+                f"benchmarks/run.py: registered benchmark {name!r} is not "
+                f"documented in benchmarks/README.md")
     return errors
+
+
+def check_evaluator_catalog(root: Path, registry) -> list:
+    """Reverse direction of the evaluator check: every registered sweep
+    evaluator must be documented (a backticked mention in some scanned
+    doc) -- mirrors the scenario-catalog check, so adding an evaluator
+    without documenting it fails CI exactly like a stale doc name does."""
+    if registry is None:
+        return []
+    texts = [(root / rel).read_text() for rel in DOCS
+             if (root / rel).exists()]
+    return [
+        f"evaluator registry: {name!r} is in repro.sweep.spec.EVALUATORS "
+        f"but documented in none of {', '.join(DOCS)}"
+        for name in sorted(registry)
+        if not any(f"`{name}`" in t for t in texts)
+    ]
 
 
 def check(root: Path) -> list:
@@ -195,6 +218,7 @@ def check(root: Path) -> list:
                     f"{rel}: scenario {name!r} not in the repro.workloads "
                     f"registry {sorted(scenarios)}")
     errors.extend(check_scenario_catalog(root, scenarios))
+    errors.extend(check_evaluator_catalog(root, registry))
     errors.extend(check_benchmarks(root))
     return errors
 
