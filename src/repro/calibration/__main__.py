@@ -1,0 +1,13 @@
+"""``python -m repro.calibration`` — the calibration CLI.
+
+A separate ``__main__`` (rather than ``python -m repro.calibration.run``)
+so runpy does not re-execute a module the package ``__init__`` already
+imported.
+"""
+
+import sys
+
+from .run import main
+
+if __name__ == "__main__":
+    sys.exit(main())

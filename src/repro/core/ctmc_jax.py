@@ -84,7 +84,8 @@ from repro.compat import prng_key
 
 from .policies import FCFSGate, OccupancyGate, PolicySpec, PriorityRatioGate
 from .simulator import CTMCResult
-from .types import Pricing, ServicePrimitives, WorkloadClass, rate_arrays
+from .types import (Pricing, ServicePrimitives, WorkloadClass, rate_arrays,
+                    resolve_primitives)
 
 __all__ = [
     "UniformizedCTMC",
@@ -130,6 +131,7 @@ def uniformization_bound(classes: Sequence[WorkloadClass],
     plain numpy values (``qp_cap``/``qd_cap`` are per-class arrays, inf
     where ``theta_i == 0`` -- a zero rate needs no cap).
     """
+    prim = resolve_primitives(prim)
     arr = rate_arrays(classes, prim)
     lam_tot = n * arr["lam"]
     theta = arr["theta"]

@@ -23,7 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .planning import PlanSolution
-from .types import Pricing, ServicePrimitives, WorkloadClass, rate_arrays
+from .types import (Pricing, ServicePrimitives, WorkloadClass, rate_arrays,
+                    resolve_primitives)
 
 __all__ = [
     "FluidTrajectory",
@@ -69,6 +70,7 @@ def fluid_params(
     solo-first router is in force; the branch itself is selected by the
     static ``randomized`` flag of :func:`integrate_fluid_core`).
     """
+    prim = resolve_primitives(prim)
     arr = rate_arrays(classes, prim)
     B = float(prim.batch_cap)
     x_star = jnp.asarray(plan.x)

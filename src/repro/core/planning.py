@@ -29,7 +29,8 @@ from typing import Optional, Sequence
 import numpy as np
 
 from .lp import LPResult, linprog_max
-from .types import Pricing, ServicePrimitives, WorkloadClass, rate_arrays
+from .types import (Pricing, ServicePrimitives, WorkloadClass, rate_arrays,
+                    resolve_primitives)
 
 __all__ = [
     "PlanSolution",
@@ -282,6 +283,7 @@ def _solve(
 ) -> PlanSolution:
     classes = validate_planning_instance(
         classes, capacity, label=f"planning LP ({objective})")
+    prim = resolve_primitives(prim)
     arr = rate_arrays(classes, prim)
     if capacity != 1.0:  # uniform server-speed scale (elasticity studies)
         arr = dict(arr)

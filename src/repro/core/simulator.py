@@ -27,7 +27,8 @@ from typing import Optional, Sequence
 import numpy as np
 
 from .policies import PolicySpec
-from .types import Pricing, ServicePrimitives, WorkloadClass, rate_arrays
+from .types import (Pricing, ServicePrimitives, WorkloadClass, rate_arrays,
+                    resolve_primitives)
 
 __all__ = ["CTMCResult", "CTMCSimulator"]
 
@@ -96,7 +97,7 @@ class CTMCSimulator:
         record_every: float = 0.0,
     ):
         self.classes = tuple(classes)
-        self.prim = prim
+        self.prim = prim = resolve_primitives(prim)
         self.pricing = pricing
         self.policy = policy
         self.n = int(n)

@@ -22,6 +22,7 @@ __all__ = [
     "Pricing",
     "ClassRates",
     "rates_for",
+    "resolve_primitives",
     "DEFAULT_PRIMITIVES",
 ]
 
@@ -98,7 +99,25 @@ class ClassRates:
     mu_s: float  # solo-mode decode completion rate gamma / D_i
 
 
+def resolve_primitives(prim) -> ServicePrimitives:
+    """Accept a :class:`ServicePrimitives` or anything exposing the
+    calibration ``IterationTimeModel`` protocol (a ``primitives()``
+    method) -- so planning/CTMC/fluid entry points can consume a fitted
+    iteration-time model directly."""
+    if isinstance(prim, ServicePrimitives):
+        return prim
+    getter = getattr(prim, "primitives", None)
+    if callable(getter):
+        out = getter()
+        if isinstance(out, ServicePrimitives):
+            return out
+    raise TypeError(
+        f"expected ServicePrimitives or an IterationTimeModel with a "
+        f".primitives() method, got {type(prim).__name__}")
+
+
 def rates_for(cls: WorkloadClass, prim: ServicePrimitives) -> ClassRates:
+    prim = resolve_primitives(prim)
     tau = prim.tau_mix
     return ClassRates(
         mu_p=prim.chunk / (cls.prompt_len * tau),
@@ -131,6 +150,7 @@ def rate_arrays(
     classes: Sequence[WorkloadClass], prim: ServicePrimitives
 ) -> dict[str, np.ndarray]:
     """Vectorised per-class parameter arrays used by the LP/fluid/simulator."""
+    prim = resolve_primitives(prim)
     rr = [rates_for(c, prim) for c in classes]
     return {
         "lam": np.array([c.arrival_rate for c in classes], dtype=np.float64),

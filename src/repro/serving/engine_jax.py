@@ -171,7 +171,17 @@ def iteration_budget(tt: TraceTensors, cfg: EngineConfig, h_eff: float,
     else:
         chunks = np.ceil(P / prim.chunk)
     pathwise = float(chunks.sum() + D.sum())
-    tau_min = min(prim.alpha + prim.beta, prim.tau_solo)
+    m = cfg.iter_model
+    if m is not None:
+        # lower-bound the iteration time under the plugged model: affine
+        # surfaces are minimal at (C=1, K=0); a table model's true min is
+        # over its knot values (constant extrapolation beyond them)
+        tau_min = min(m.tau_mix(1.0), m.tau_solo(0.0))
+        if hasattr(m, "knots"):
+            kn = m.knots()
+            tau_min = min(min(kn["mix_y"]), min(kn["solo_y"]))
+    else:
+        tau_min = min(prim.alpha + prim.beta, prim.tau_solo)
     clock = cfg.n_servers * (h_eff / tau_min + 1.0)
     return A + int(np.ceil(min(pathwise, clock))) + 16
 
@@ -179,7 +189,7 @@ def iteration_budget(tt: TraceTensors, cfg: EngineConfig, h_eff: float,
 def _build_step(params: dict, key, *, n: int, B: int, gate_kind: str,
                 router_kind: str, charging: str, partition: str,
                 sarathi: bool, unchunked: bool, prefill_only: bool,
-                has_pw: bool, expiry: bool):
+                has_pw: bool, expiry: bool, model_kind: str = "affine"):
     dtype = params["t_arr"].dtype
     R = params["t_arr"].shape[0]
     I = params["x_star"].shape[0]
@@ -257,9 +267,18 @@ def _build_step(params: dict, key, *, n: int, B: int, gate_kind: str,
         kv = (jnp.sum(jnp.where(occupied, P[src] + c["tout"][src], 0.0),
                       axis=1)
               + jnp.where(has_pf, P[pfr] - pl, 0.0))
-        tau = jnp.where(has_pf & (chn > 0),
-                        params["alpha"] + params["beta"] * chn,
-                        params["tau_solo"] + params["b_s"] * kv)
+        if model_kind == "table":
+            # piecewise-linear iteration-time surfaces over calibrated
+            # knots (jnp.interp clamps beyond the knot range, matching
+            # TableModel's constant extrapolation in the Python engine)
+            tau = jnp.where(
+                has_pf & (chn > 0),
+                jnp.interp(chn, params["mix_x"], params["mix_y"]),
+                jnp.interp(kv, params["solo_x"], params["solo_y"]))
+        else:  # "affine": the historical expression, untouched
+            tau = jnp.where(has_pf & (chn > 0),
+                            params["alpha"] + params["beta"] * chn,
+                            params["tau_solo"] + params["b_s"] * kv)
         c["chunk"] = jnp.where(do, chn, c["chunk"])
         c["t_next"] = jnp.where(do, now + tau, c["t_next"])
         c["busy"] = c["busy"] | do
@@ -627,17 +646,17 @@ def _init_carry(R: int, n: int, B: int, I: int, dtype,
 
 _STATICS = ("n_steps", "n", "B", "gate_kind", "router_kind", "charging",
             "partition", "sarathi", "unchunked", "prefill_only", "has_pw",
-            "expiry", "loop")
+            "expiry", "loop", "model_kind")
 
 
 def _run_core(params, key, *, n_steps, n, B, gate_kind, router_kind,
               charging, partition, sarathi, unchunked, prefill_only,
-              has_pw, expiry, loop="while"):
+              has_pw, expiry, loop="while", model_kind="affine"):
     step = _build_step(params, key, n=n, B=B, gate_kind=gate_kind,
                        router_kind=router_kind, charging=charging,
                        partition=partition, sarathi=sarathi,
                        unchunked=unchunked, prefill_only=prefill_only,
-                       has_pw=has_pw, expiry=expiry)
+                       has_pw=has_pw, expiry=expiry, model_kind=model_kind)
     R = params["t_arr"].shape[0]
     I = params["x_star"].shape[0]
     init = _init_carry(R, n, B, I, params["t_arr"].dtype,
@@ -807,6 +826,25 @@ class ClusterEngineJAX:
             "n_f": a(self.n),
             "h_eff": a(self.h_eff),
         }
+        # plugged iteration-time model (repro.calibration protocol):
+        # affine-kind models override the four surface scalars; table-kind
+        # models add knot arrays and flip the static interp dispatch.  No
+        # model (the default) leaves params and statics byte-identical.
+        self.model_kind = "affine"
+        m = cfg.iter_model
+        if m is not None:
+            self.model_kind = getattr(m, "kind", "affine")
+            if self.model_kind == "table":
+                for k, v in m.knots().items():
+                    self.params[k] = a(np.asarray(v))
+            elif hasattr(m, "jax_params"):
+                for k, v in m.jax_params().items():
+                    self.params[k] = a(v)
+            else:  # generic protocol model: sample the affine scalars
+                self.params["alpha"] = a(m.tau_mix(0.0))
+                self.params["beta"] = a(m.tau_mix(1.0) - m.tau_mix(0.0))
+                self.params["tau_solo"] = a(m.tau_solo(0.0))
+                self.params["b_s"] = a(m.tau_solo(1.0) - m.tau_solo(0.0))
         self._static = dict(
             n_steps=self.n_steps, n=self.n, B=int(prim.batch_cap),
             gate_kind=self.gate_kind, router_kind=self.router_kind,
@@ -818,7 +856,7 @@ class ClusterEngineJAX:
             # deadline machinery compiles away on the (default) traces
             # where every request has patience == inf
             expiry=bool(np.isfinite(tt.patience[arrived]).any()),
-            loop=loop)
+            loop=loop, model_kind=self.model_kind)
 
     # -- raw (device array) interface -------------------------------------
     def _key(self, seed):

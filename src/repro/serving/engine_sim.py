@@ -47,6 +47,11 @@ class EngineConfig:
     sarathi_budget: bool = False  # decode-first chunk budget
     seed: int = 0
     record_queues_every: float = 0.0
+    # Optional calibrated IterationTimeModel (repro.calibration.models
+    # protocol).  None keeps the historical inline arithmetic untouched;
+    # when set, tau_mix/tau_solo come from the model instead of
+    # (prim, solo_kv_slope).
+    iter_model: Optional[object] = None
 
 
 @dataclass
@@ -351,6 +356,11 @@ class ClusterEngine:
 
     # ------------------------------------------------------------ iterations
     def _iteration_time(self, srv: _Server) -> float:
+        m = self.cfg.iter_model
+        if m is not None:
+            if srv.prefill is not None and srv.iter_chunk > 0:
+                return m.tau_mix(srv.iter_chunk) * srv.speed
+            return m.tau_solo(srv.kv_tokens()) * srv.speed
         prim = self.prim
         if srv.prefill is not None and srv.iter_chunk > 0:
             return (prim.alpha + prim.beta * srv.iter_chunk) * srv.speed

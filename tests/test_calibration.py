@@ -1,0 +1,269 @@
+"""Calibration subsystem: deterministic fitter/model edge cases, the
+bitwise-default oracle guarantee, the CPU (roofline-fallback) round-trip
+acceptance test, and statistical equivalence of the two serving engines
+under a *fitted* non-default iteration-time model."""
+
+import numpy as np
+import pytest
+
+from repro.calibration import (AffineModel, CalibrationArtifact,
+                               CalibrationGrid, Sample, TableModel,
+                               calibrate, fit_affine, fit_surfaces,
+                               model_from_artifact, roofline_tau)
+from repro.calibration.fit import FitDegenerateError
+from repro.configs import get_config
+from repro.core.planning import SLISpec, solve_bundled_lp
+from repro.core.policies import gate_and_route
+from repro.core.types import (DEFAULT_PRIMITIVES, Pricing,
+                              ServicePrimitives, WorkloadClass, rates_for,
+                              resolve_primitives)
+from repro.data.traces import TraceConfig, synth_azure_trace, trace_class_means
+
+PRIM = ServicePrimitives()
+PRICE = Pricing(0.1, 0.2)
+N = 10
+HORIZON = 40.0
+
+
+# ------------------------------------------------------------- fitter unit
+def test_fit_degenerate_constant_x_raises():
+    with pytest.raises(FitDegenerateError):
+        fit_affine([5.0, 5.0, 5.0], [1.0, 2.0, 3.0])
+
+
+def test_fit_constant_y_flagged_not_fabricated():
+    f = fit_affine([1.0, 2.0, 3.0], [7.0, 7.0, 7.0])
+    assert f.constant_y and f.slope == 0.0 and f.intercept == 7.0
+    assert f.r2 == 1.0 and f.rmse == 0.0
+
+
+def test_fit_exact_affine_recovery():
+    xs = [32.0, 64.0, 128.0, 256.0, 512.0]
+    f = fit_affine(xs, [0.01 + 5e-5 * x for x in xs])
+    assert f.intercept == pytest.approx(0.01, rel=1e-9)
+    assert f.slope == pytest.approx(5e-5, rel=1e-9)
+    assert f.r2 == pytest.approx(1.0, abs=1e-12)
+    assert not f.clamped and not f.constant_y
+
+
+def test_fit_negative_slope_clamped():
+    f = fit_affine([1.0, 2.0, 3.0], [3.0, 2.0, 1.0])
+    assert f.clamped and f.slope == 0.0
+
+
+def test_fit_surfaces_uses_reference_batch():
+    """Smaller-batch cells are diagnostics, not regression inputs."""
+    good = [Sample("mixed", 16, c, 1024, 0.01 + 1e-5 * c, "roofline")
+            for c in (32, 64, 128)]
+    good += [Sample("solo", 16, 0, k, 0.005 + 1e-8 * k, "roofline")
+             for k in (256, 1024, 4096)]
+    # batch-8 cells with wildly different times must not move the fit
+    noise = [Sample("mixed", 8, c, 1024, 99.0, "roofline")
+             for c in (32, 64, 128)]
+    noise += [Sample("solo", 8, 0, k, 99.0, "roofline")
+              for k in (256, 1024, 4096)]
+    fits = fit_surfaces(good + noise)
+    assert fits["mix"].intercept == pytest.approx(0.01, rel=1e-9)
+    assert fits["solo"].slope == pytest.approx(1e-8, rel=1e-9)
+
+
+# ------------------------------------------------------------- models unit
+def test_default_affine_model_is_seed_constants():
+    m = AffineModel()
+    assert m.tau_mix(256.0) == (DEFAULT_PRIMITIVES.alpha
+                                + DEFAULT_PRIMITIVES.beta * 256.0)
+    assert m.tau_solo(0.0) == DEFAULT_PRIMITIVES.tau_solo
+    assert m.primitives() == DEFAULT_PRIMITIVES
+
+
+def test_table_model_interp_matches_knots():
+    t = TableModel(mix_x=(32.0, 256.0), mix_y=(0.01, 0.02),
+                   solo_x=(0.0, 1000.0), solo_y=(0.005, 0.006))
+    assert t.tau_mix(32.0) == 0.01 and t.tau_mix(256.0) == 0.02
+    assert t.tau_mix(1.0) == 0.01  # constant extrapolation below
+    assert t.tau_mix(512.0) == 0.02  # and above
+    assert t.tau_mix(144.0) == pytest.approx(0.015)
+
+
+def test_grid_validation():
+    with pytest.raises(ValueError):
+        CalibrationGrid(chunk=(64, 32, 128))  # not increasing
+    with pytest.raises(ValueError):
+        CalibrationGrid(kv=(1024,))  # cannot identify a slope
+    g = CalibrationGrid.tiny()
+    assert g.n_cells == len(list(g.cells()))
+
+
+def test_artifact_schema_version_rejected():
+    art = calibrate("qwen2-0.5b", grid=CalibrationGrid.tiny(),
+                    backend="roofline")
+    d = art.to_dict()
+    d["schema_version"] = 999
+    with pytest.raises(ValueError, match="schema_version"):
+        CalibrationArtifact.from_dict(d)
+
+
+def test_resolve_primitives_accepts_models():
+    m = AffineModel()
+    assert resolve_primitives(m) == DEFAULT_PRIMITIVES
+    assert resolve_primitives(DEFAULT_PRIMITIVES) is DEFAULT_PRIMITIVES
+    with pytest.raises(TypeError):
+        resolve_primitives(object())
+    cls = WorkloadClass("c", 512, 128, 0.1)
+    assert rates_for(cls, m) == rates_for(cls, DEFAULT_PRIMITIVES)
+    # and the planning LP consumes a model directly
+    classes = [WorkloadClass("a", 512, 128, 0.4, patience=3e-4),
+               WorkloadClass("b", 2048, 256, 0.2, patience=3e-4)]
+    p1 = solve_bundled_lp(classes, m, PRICE)
+    p2 = solve_bundled_lp(classes, DEFAULT_PRIMITIVES, PRICE)
+    assert p1.revenue_rate == pytest.approx(p2.revenue_rate, rel=1e-12)
+
+
+def test_roofline_backend_deterministic():
+    """No wall-clock anywhere in the fallback: bit-identical artifacts."""
+    g = CalibrationGrid.tiny()
+    a1 = calibrate("qwen2-0.5b", grid=g, backend="roofline")
+    a2 = calibrate("qwen2-0.5b", grid=g, backend="roofline")
+    assert a1.to_json() == a2.to_json()
+    cfg = get_config("qwen2-0.5b")
+    assert roofline_tau(cfg, tokens=100, kv_tokens=1000) == \
+        roofline_tau(cfg, tokens=100, kv_tokens=1000)
+
+
+# --------------------------------------------------- engine integrations
+pytest_sim = pytest.mark.sim
+
+
+def _mk(seed=42):
+    trace = synth_azure_trace(
+        TraceConfig(horizon=HORIZON, base_rate=2.0, compression=0.08,
+                    seed=seed))
+    means = trace_class_means(trace, 2)
+    classes = [
+        WorkloadClass(nm, m[0], m[1], m[2] / N, patience=3e-4)
+        for nm, m in zip(("code", "conv"), means)
+    ]
+    return trace, classes
+
+
+def _policy(classes, prim):
+    plan = solve_bundled_lp(classes, prim, PRICE,
+                            sli=SLISpec(pin_zero_decode_queue=True))
+    return gate_and_route(plan)
+
+
+def _py(trace, classes, pol, **cfg_kw):
+    from repro.serving.engine_sim import ClusterEngine, EngineConfig
+
+    cfg = EngineConfig(cfg_kw.pop("prim", PRIM), PRICE, n_servers=N,
+                       seed=1, **cfg_kw)
+    return ClusterEngine(classes, pol, cfg).run(
+        trace, horizon=HORIZON).summary()
+
+
+def _jx(trace, classes, pol, **cfg_kw):
+    from repro.serving.engine_jax import ClusterEngineJAX
+    from repro.serving.engine_sim import EngineConfig
+
+    cfg = EngineConfig(cfg_kw.pop("prim", PRIM), PRICE, n_servers=N,
+                       **cfg_kw)
+    return ClusterEngineJAX(classes, pol, cfg, trace, horizon=HORIZON).run(0)
+
+
+def _half_width(vals):
+    return 1.96 * np.std(vals, ddof=1) / np.sqrt(len(vals))
+
+
+@pytest_sim
+def test_engine_sim_default_model_bitwise_identical():
+    """iter_model=AffineModel() (seed constants) must not move a single
+    bit of either engine's output vs the historical inline arithmetic."""
+    trace, classes = _mk()
+    pol = _policy(classes, PRIM)
+    assert _py(trace, classes, pol) == \
+        _py(trace, classes, pol, iter_model=AffineModel())
+    assert _jx(trace, classes, pol) == \
+        _jx(trace, classes, pol, iter_model=AffineModel())
+
+
+@pytest_sim
+def test_cpu_roundtrip_fitted_model_all_engines():
+    """Acceptance: CPU roofline calibration -> artifact -> fitted model
+    plugs into engine_sim, engine_jax AND ctmc_jax; R^2 >= 0.95."""
+    from repro.core.ctmc_jax import UniformizedCTMC
+
+    art = calibrate("qwen2-0.5b", grid=CalibrationGrid.tiny(),
+                    backend="roofline")
+    assert art.min_r2 >= 0.95
+    assert np.isfinite([art.alpha, art.beta, art.a_s, art.b_s,
+                        art.mix.rmse, art.solo.rmse]).all()
+    fitted = model_from_artifact(art, "fitted")
+    assert fitted.name == "fitted" and fitted.primitives().alpha == art.alpha
+
+    trace, classes = _mk()
+    pol = _policy(classes, fitted)
+    m_py = _py(trace, classes, pol, prim=fitted.primitives(),
+               iter_model=fitted)
+    m_jx = _jx(trace, classes, pol, prim=fitted.primitives(),
+               iter_model=fitted)
+    assert m_jx["budget_exhausted"] == 0.0
+    assert m_py["arrivals"] == m_jx["arrivals"]
+    assert m_jx["revenue_rate"] == pytest.approx(
+        m_py["revenue_rate"], rel=0.05)
+
+    # ctmc_jax consumes the model via resolve_primitives
+    ctmc_classes = [
+        WorkloadClass("d", 300, 1000, arrival_rate=0.5, patience=0.1),
+        WorkloadClass("p", 3000, 400, arrival_rate=0.5, patience=0.1)]
+    plan = solve_bundled_lp(ctmc_classes, fitted, PRICE,
+                            sli=SLISpec(pin_zero_decode_queue=True))
+    jsim = UniformizedCTMC(ctmc_classes, fitted, PRICE,
+                           gate_and_route(plan), n=20, horizon=10.0)
+    res = jsim.results_from_raw(jsim.run_batch_raw([0, 1]))
+    assert all(np.isfinite(r.revenue_rate_per_server) for r in res)
+
+
+@pytest_sim
+def test_engines_equivalent_under_fitted_model():
+    """engine_sim vs engine_jax stay statistically equivalent under a
+    *fitted* non-default model (the test_engine_jax CI half-width
+    harness), not just under the seed constants."""
+    art = calibrate("qwen2-0.5b", grid=CalibrationGrid.tiny(),
+                    backend="roofline")
+    fitted = model_from_artifact(art, "fitted")
+    assert fitted.jax_params() != AffineModel().jax_params()  # non-default
+
+    n_traces = 5
+    rev = []
+    for s in range(n_traces):
+        trace, classes = _mk(seed=200 + s)
+        pol = _policy(classes, fitted)
+        kw = dict(prim=fitted.primitives(), iter_model=fitted)
+        m_py = _py(trace, classes, pol, **kw)
+        m_jx = _jx(trace, classes, pol, **kw)
+        assert m_jx["budget_exhausted"] == 0.0
+        assert m_py["arrivals"] == m_jx["arrivals"]
+        assert m_jx["revenue_rate"] == pytest.approx(
+            m_py["revenue_rate"], rel=0.05)
+        rev.append((m_py["revenue_rate"], m_jx["revenue_rate"]))
+    py_v, jx_v = np.array(rev).T
+    tol = 2.0 * (_half_width(py_v) + _half_width(jx_v)) + 1e-9
+    assert abs(py_v.mean() - jx_v.mean()) <= tol
+
+
+@pytest_sim
+def test_table_model_agrees_across_engines():
+    """The jnp.interp step-kernel path matches the Python TableModel."""
+    art = calibrate("qwen2-0.5b", grid=CalibrationGrid.tiny(),
+                    backend="roofline")
+    table = model_from_artifact(art, "table")
+    trace, classes = _mk()
+    pol = _policy(classes, table)
+    kw = dict(prim=table.primitives(), iter_model=table)
+    m_py = _py(trace, classes, pol, **kw)
+    m_jx = _jx(trace, classes, pol, **kw)
+    assert m_jx["budget_exhausted"] == 0.0
+    assert m_jx["revenue_rate"] == pytest.approx(
+        m_py["revenue_rate"], rel=0.05)
+    assert m_jx["completions"] == pytest.approx(
+        m_py["completions"], rel=0.05, abs=3)

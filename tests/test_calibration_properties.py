@@ -1,0 +1,150 @@
+"""Hypothesis property tests for the calibration subsystem.
+
+Three paper-level invariants, each over randomized inputs:
+
+1. **Planted-parameter recovery** -- the robust fitter recovers
+   ``(alpha, beta, a_s, b_s)`` from synthetic noisy timings of the true
+   affine surfaces (within a noise-scaled tolerance, even with an
+   injected outlier the Huber weights must down-weight).
+2. **Positivity and monotonicity** -- fitted tau surfaces are positive
+   and non-decreasing in ``C`` and ``K`` over the grid's range, for both
+   the fitted-affine and the table model.
+3. **Lossless artifact round-trip** -- ``CalibrationArtifact`` survives
+   JSON serialisation exactly (``from_json(to_json(a)) == a``), floats
+   included.
+
+Importorskips hypothesis (the ``tests/test_lp_jax_properties.py``
+pattern) so deterministic environments without it still collect.
+"""
+
+import math
+
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis")  # property tests need hypothesis; skip where absent
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.calibration import (CalibrationArtifact,  # noqa: E402
+                               CalibrationGrid, Sample, fit_surfaces,
+                               model_from_artifact)
+from repro.launch.mesh import v5e_constants  # noqa: E402
+
+
+def _lcg(seed):
+    """Tiny deterministic PRNG (keeps hypothesis shrinking stable)."""
+    state = seed or 1
+
+    def rnd():
+        nonlocal state
+        state = (1103515245 * state + 12345) % (1 << 31)
+        return state / float(1 << 31)
+
+    return rnd
+
+
+@st.composite
+def planted_surfaces(draw):
+    alpha = draw(st.floats(1e-3, 5e-2))
+    beta = draw(st.floats(1e-7, 1e-4))
+    a_s = draw(st.floats(1e-3, 2e-2))
+    b_s = draw(st.floats(1e-9, 1e-6))
+    noise = draw(st.floats(0.0, 0.02))  # relative noise scale
+    seed = draw(st.integers(0, 2**31 - 1))
+    return alpha, beta, a_s, b_s, noise, seed
+
+
+def _samples_for(alpha, beta, a_s, b_s, noise, seed,
+                 grid=None):
+    grid = grid or CalibrationGrid.default()
+    rnd = _lcg(seed)
+    out = []
+    for cell in grid.cells():
+        tau = (alpha + beta * cell.chunk if cell.mode == "mixed"
+               else a_s + b_s * cell.kv)
+        tau *= 1.0 + noise * (2.0 * rnd() - 1.0)
+        out.append(Sample(mode=cell.mode, batch=cell.batch,
+                          chunk=cell.chunk, kv=cell.kv, tau=tau,
+                          backend="roofline"))
+    return grid, out
+
+
+@settings(max_examples=25, deadline=None)
+@given(planted_surfaces())
+def test_fitter_recovers_planted_parameters(p):
+    alpha, beta, a_s, b_s, noise, seed = p
+    grid, samples = _samples_for(alpha, beta, a_s, b_s, noise, seed)
+    fits = fit_surfaces(samples)
+    # tolerance scales with the injected noise; exact when noise == 0
+    tol = 1e-9 + 5.0 * noise
+    assert fits["mix"].intercept == pytest.approx(alpha, rel=tol, abs=tol)
+    assert fits["solo"].intercept == pytest.approx(a_s, rel=tol, abs=tol)
+    # slopes: compare through the surface values at the grid extremes
+    # (slope itself is ill-conditioned when beta * C << alpha)
+    c_hi, k_hi = max(grid.chunk), max(grid.kv)
+    assert fits["mix"](c_hi) == pytest.approx(
+        alpha + beta * c_hi, rel=tol, abs=tol * alpha)
+    assert fits["solo"](k_hi) == pytest.approx(
+        a_s + b_s * k_hi, rel=tol, abs=tol * a_s)
+    if noise == 0.0:
+        assert fits["mix"].r2 == pytest.approx(1.0, abs=1e-9)
+        assert fits["solo"].r2 == pytest.approx(1.0, abs=1e-9)
+
+
+@settings(max_examples=20, deadline=None)
+@given(planted_surfaces())
+def test_fitter_survives_one_outlier(p):
+    """A single corrupted cell (10x the true time) must not tilt the
+    surface by more than a few percent -- the Huber IRLS down-weights it."""
+    alpha, beta, a_s, b_s, _, seed = p
+    _, samples = _samples_for(alpha, beta, a_s, b_s, 0.0, seed)
+    mixed = [s for s in samples if s.mode == "mixed"]
+    bad = mixed[seed % len(mixed)]
+    samples[samples.index(bad)] = Sample(
+        mode=bad.mode, batch=bad.batch, chunk=bad.chunk, kv=bad.kv,
+        tau=bad.tau * 10.0, backend=bad.backend)
+    fits = fit_surfaces(samples)
+    assert fits["mix"].intercept == pytest.approx(alpha, rel=0.05,
+                                                 abs=0.05 * alpha)
+
+
+@settings(max_examples=25, deadline=None)
+@given(planted_surfaces(), st.sampled_from(["fitted", "table"]))
+def test_fitted_surfaces_positive_and_monotone(p, kind):
+    alpha, beta, a_s, b_s, noise, seed = p
+    grid, samples = _samples_for(alpha, beta, a_s, b_s, noise, seed)
+    fits = fit_surfaces(samples)
+    art = CalibrationArtifact(
+        arch="qwen2-0.5b", backend="roofline", grid=grid,
+        samples=tuple(samples), mix=fits["mix"], solo=fits["solo"],
+        hw={k: float(v) for k, v in v5e_constants().items()})
+    m = model_from_artifact(art, kind)
+    cs = [1, 16, 64, 256, 512, 1024]
+    ks = [0, 128, 1024, 8192, 65536]
+    taus_c = [m.tau_mix(c) for c in cs]
+    taus_k = [m.tau_solo(k) for k in ks]
+    assert all(t > 0 and math.isfinite(t) for t in taus_c + taus_k)
+    if kind == "fitted":  # affine fits clamp negative slopes
+        assert all(b >= a for a, b in zip(taus_c, taus_c[1:]))
+        assert all(b >= a for a, b in zip(taus_k, taus_k[1:]))
+
+
+@settings(max_examples=25, deadline=None)
+@given(planted_surfaces())
+def test_artifact_json_round_trip_lossless(p):
+    alpha, beta, a_s, b_s, noise, seed = p
+    grid, samples = _samples_for(alpha, beta, a_s, b_s, noise, seed)
+    fits = fit_surfaces(samples)
+    art = CalibrationArtifact(
+        arch="gemma2-2b", backend="roofline", grid=grid,
+        samples=tuple(samples), mix=fits["mix"], solo=fits["solo"],
+        hw={k: float(v) for k, v in v5e_constants().items()},
+        created="2026-08-09T00:00:00")
+    again = CalibrationArtifact.from_json(art.to_json())
+    assert again == art  # dataclass equality: every float bit-exact
+    # and a second hop is a fixed point
+    assert CalibrationArtifact.from_json(again.to_json()) == art
+
+
+# deterministic fitter/model edge cases live in tests/test_calibration.py
+# (they must run even where hypothesis is absent)

@@ -104,6 +104,72 @@ def test_ssd_scan_sweep(B, S, H, P, N, chunk, dtype):
                                rtol=1e-2)
 
 
+# --------------------------------------------------------------------------
+# Calibration-grid parity: the calibration subsystem times the kernels
+# through their public ops wrappers at (C, K) shapes the grid produces --
+# including odd / non-multiple-of-block edges that exercise the wrappers'
+# padding and block-halving logic.  These sweeps guarantee calibration
+# never times a kernel whose numerics are unverified at that shape.
+
+# odd prefill chunks C (prime / non-multiple-of-block) + one block edge
+CALIB_CHUNKS = (17, 48, 100, 128)
+# per-stream cache lengths ceil(K / B) from odd aggregate-KV grid points
+CALIB_KV_LENS = (33, 108, 300)
+
+
+@pytest.mark.parametrize("C", CALIB_CHUNKS)
+def test_prefill_ops_parity_at_calibration_chunks(C):
+    from repro.kernels.prefill_attention.ops import prefill_attention
+
+    H, KV, D = 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(10), 3)
+    q = jax.random.normal(ks[0], (1, C, H, D))
+    k = jax.random.normal(ks[1], (1, C, KV, D))
+    v = jax.random.normal(ks[2], (1, C, KV, D))
+    out = prefill_attention(q, k, v, interpret=True)
+    ref = prefill_attention_ref(q, k, v)
+    assert out.shape == ref.shape == (1, C, H, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("S", CALIB_KV_LENS)
+def test_decode_ops_parity_at_calibration_kv(S):
+    from repro.kernels.decode_attention.ops import decode_attention
+
+    B, H, KV, D = 4, 4, 2, 32
+    ks = jax.random.split(jax.random.PRNGKey(11), 3)
+    q = jax.random.normal(ks[0], (B, 1, H, D))
+    k = jax.random.normal(ks[1], (B, S, KV, D))
+    v = jax.random.normal(ks[2], (B, S, KV, D))
+    # ragged fills: full cache plus partial residency per stream
+    kv_len = jnp.array([S, max(1, S - 1), max(1, S // 2), max(1, S // 3)],
+                       jnp.int32)
+    out = decode_attention(q, k, v, kv_len, interpret=True)
+    ref = decode_attention_ref(q, k, v, kv_len)
+    assert out.shape == ref.shape == (B, 1, H, D)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("S", (48, 100))
+def test_ssd_ops_parity_at_calibration_chunks(S):
+    from repro.kernels.ssd_scan.ops import ssd_scan
+
+    B, H, P, N = 1, 2, 16, 16
+    ks = jax.random.split(jax.random.PRNGKey(12), 4)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    Bm = jax.random.normal(ks[1], (B, S, N)) * 0.5
+    Cm = jax.random.normal(ks[2], (B, S, N)) * 0.5
+    log_a = -jnp.abs(jax.random.normal(ks[3], (B, S, H))) * 0.1
+    y, h = ssd_scan(x, Bm, Cm, log_a, interpret=True)
+    yr, hr = ssd_scan_ref(x, Bm, Cm, log_a)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr),
+                               atol=2e-4, rtol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr),
+                               atol=1e-2, rtol=1e-2)
+
+
 def test_model_attention_pallas_path_matches_xla():
     """attention_prefill(kernel_impl='pallas') == xla path."""
     from repro.models.attention import attention_prefill, attn_defs

@@ -32,7 +32,11 @@ from pathlib import Path
 ARTIFACTS = {
     "ablations": dict(bench="bench_ablations",
                       required=["rows", "ggsp_best"]),
-    "calibration": dict(bench="bench_calibration", required=[]),
+    "calibration": dict(bench="bench_calibration", committed=True,
+                        required=["artifact", "mixed_fit", "solo_fit",
+                                  "min_r2",
+                                  "fitted_vs_seed_revenue_delta_pct",
+                                  "budget_exhausted"]),
     "charging": dict(bench="bench_charging", required=[]),
     "classes": dict(bench="bench_classes", required=[]),
     "convergence": dict(bench="bench_convergence", required=["rows"]),
@@ -51,7 +55,8 @@ ARTIFACTS = {
                                      "gap_monotone_separate",
                                      "r_star_agreement_rel",
                                      "budget_exhausted"]),
-    "roofline": dict(bench="bench_roofline", required=[]),
+    "roofline": dict(bench="bench_roofline", committed=True,
+                     required=["archs", "dominant_histogram", "hw"]),
     "scale_sweep": dict(bench="bench_scale_sweep", required=[]),
     "scenarios": dict(bench="bench_scenarios", committed=True,
                       required=["scenarios", "rows",

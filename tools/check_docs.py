@@ -26,8 +26,8 @@ import sys
 from pathlib import Path
 
 DOCS = ("README.md", "docs/ARCHITECTURE.md", "docs/SIMULATORS.md",
-        "docs/WORKLOADS.md", "docs/PLANNING.md", "benchmarks/README.md",
-        "ROADMAP.md", "CHANGES.md")
+        "docs/WORKLOADS.md", "docs/PLANNING.md", "docs/CALIBRATION.md",
+        "benchmarks/README.md", "ROADMAP.md", "CHANGES.md")
 
 LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
 
@@ -118,6 +118,50 @@ def check_scenario_catalog(root: Path, registry) -> list:
     ]
 
 
+# how docs name iteration-time models (registry lookups, backticked
+# prose) -- same idea as the evaluator/scenario patterns
+MODEL_RES = (
+    re.compile(r"model_from_artifact\([^,)]+,\s*\"([a-z_]+)\""),
+    re.compile(r"`([a-z_]+)` (?:iteration-time )?model\b"),
+    re.compile(r"iteration-time models? `([a-z_]+)`"),
+)
+
+
+def known_models(root: Path):
+    """The iteration-time-model registry, or an error string."""
+    sys.path.insert(0, str(root / "src"))
+    try:
+        from repro.calibration import list_models
+        return set(list_models()), None
+    except Exception as exc:  # missing dep / broken import = check error
+        return None, f"cannot import repro.calibration ({exc})"
+
+
+def mentioned_models(md: str):
+    names = set()
+    for rx in MODEL_RES:
+        for m in rx.finditer(md):
+            names.update(p for p in m.group(1).split(",") if p)
+    return names
+
+
+def check_model_catalog(root: Path, registry) -> list:
+    """docs/CALIBRATION.md's registry table must cover every registered
+    iteration-time model (reverse of the mention check)."""
+    doc = root / "docs" / "CALIBRATION.md"
+    if registry is None:
+        return []
+    if not doc.exists():
+        return ["docs/CALIBRATION.md: missing (the iteration-time-model "
+                "registry must be documented there)"]
+    ticked = set(re.findall(r"`([a-z0-9_]+)`", doc.read_text()))
+    return [
+        f"docs/CALIBRATION.md: registered iteration-time model {name!r} "
+        f"is not documented in the catalog"
+        for name in sorted(registry - ticked)
+    ]
+
+
 BENCH_RE = re.compile(r"\b(bench_\w+)\b")
 
 
@@ -189,6 +233,9 @@ def check(root: Path) -> list:
     scenarios, scn_err = known_scenarios(root)
     if scn_err:
         errors.append(f"scenario registry: {scn_err}")
+    models, mdl_err = known_models(root)
+    if mdl_err:
+        errors.append(f"iteration-time-model registry: {mdl_err}")
     for rel in DOCS:
         doc = root / rel
         if not doc.exists():
@@ -217,7 +264,13 @@ def check(root: Path) -> list:
                 errors.append(
                     f"{rel}: scenario {name!r} not in the repro.workloads "
                     f"registry {sorted(scenarios)}")
+        if models is not None:
+            for name in sorted(mentioned_models(md) - models):
+                errors.append(
+                    f"{rel}: iteration-time model {name!r} not in the "
+                    f"repro.calibration registry {sorted(models)}")
     errors.extend(check_scenario_catalog(root, scenarios))
+    errors.extend(check_model_catalog(root, models))
     errors.extend(check_evaluator_catalog(root, registry))
     errors.extend(check_benchmarks(root))
     return errors
