@@ -23,6 +23,7 @@ import numpy as np
 __all__ = ["Request", "ClassProfile", "TraceConfig", "TraceValidationError",
            "TraceTensors", "synth_azure_trace", "load_trace_csv",
            "validate_requests", "tensorize_trace", "untensorize_trace",
+           "chunk_trace", "concat_chunks",
            "dolly_classes", "DOLLY_STATS", "trace_class_means",
            "trace_class_means_windowed"]
 
@@ -298,6 +299,60 @@ def untensorize_trace(tt: TraceTensors) -> list[Request]:
                 int(tt.P[k]), int(tt.D[k]), float(tt.patience[k]))
         for k in range(tt.R) if tt.valid[k]
     ]
+
+
+def chunk_trace(reqs: Sequence[Request],
+                chunk_size: int) -> list[TraceTensors]:
+    """Split a trace into fixed-shape chunks for streamed replay.
+
+    Every chunk is padded to exactly ``chunk_size`` rows so they all
+    share one compiled step function (the streaming engine splices them
+    into its working set one at a time instead of materialising a
+    single ``(R,)`` table for the whole trace).  Chunks keep arrival
+    order; ``concat_chunks`` is the inverse.  An empty trace yields one
+    all-padding chunk so callers never special-case zero requests.
+    """
+    if chunk_size < 1:
+        raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+    reqs = list(validate_requests(reqs, source="chunk_trace"))
+    if not reqs:
+        return [tensorize_trace([], pad_to=chunk_size)]
+    return [tensorize_trace(reqs[k:k + chunk_size], pad_to=chunk_size)
+            for k in range(0, len(reqs), chunk_size)]
+
+
+def concat_chunks(chunks: Sequence[TraceTensors]) -> TraceTensors:
+    """Reassemble ``chunk_trace`` output into one padded trace.
+
+    Validates the chunk *seams*: the first real arrival of each chunk
+    must not precede the last real arrival of the one before it (the
+    streamed replay consumes arrivals in order, so a non-monotone seam
+    means the chunks were shuffled or came from different traces) and
+    raises :class:`TraceValidationError` otherwise.  Padding rows are
+    dropped; requests are re-numbered globally in arrival order.
+    """
+    if not chunks:
+        raise TraceValidationError("concat_chunks: no chunks given")
+    t_prev = -np.inf
+    reqs: list[Request] = []
+    for k, ch in enumerate(chunks):
+        if ch.n_real == 0:
+            continue
+        t_real = ch.t[ch.valid]
+        if t_real[0] < t_prev:
+            raise TraceValidationError(
+                f"concat_chunks: chunk {k} starts at t={t_real[0]} before "
+                f"the previous chunk's last arrival t={t_prev} -- chunks "
+                f"are out of order or from different traces")
+        t_prev = float(t_real[-1])
+        reqs.extend(untensorize_trace(ch))
+    out = tensorize_trace(reqs)
+    n_dropped = sum(ch.n_dropped for ch in chunks)
+    if n_dropped:
+        out = TraceTensors(rid=out.rid, t=out.t, cls=out.cls, P=out.P,
+                           D=out.D, patience=out.patience, valid=out.valid,
+                           n_real=out.n_real, n_dropped=n_dropped)
+    return out
 
 
 def dolly_classes(names: Sequence[str], total_rate: float, patience: float = 0.0):

@@ -86,6 +86,28 @@ engine reports ``budget_exhausted`` (next pending event still before
 the horizon) -- detected, never silent.  ``docs/SIMULATORS.md`` carries
 the derivation.
 
+**Multi-event blocks (``k_events``).**  The scanned body can process
+``k_events`` consecutive events per step (default 1 -- the historical
+one-event body).  The k-unrolled block is *bitwise identical* to k
+single-event steps (``tests/test_engine_diff.py`` pins this) because
+every cross-event interaction inside a block goes through carry state
+that is updated immediately, while the expensive ``(R,)``-array writes
+are *deferred and merged*: lifecycle codes flush through one k-way
+combined scatter-max per block (codes are monotone along the
+lifecycle, so max composes), first/last-emission times through one
+combined scatter-min/-max (write-only in-step), decode-buffer ring
+pushes through one k-point scatter (in-block pops overlay the pending
+pushes onto the ``B+1`` dispatch window), and the ``(R,)``
+resident-token array is replaced by a dense ``(n, B)`` per-slot
+counter (each request occupies exactly one decode slot exactly once,
+so the counter carries the same information with zero request-axis
+traffic).  A block whose horizon/budget exit lands mid-block simply
+runs its remaining events as proven no-ops.  This cuts the per-event
+``(R,)``-pass count from ~5 to ~4/k -- which is what the per-event
+wall time is made of on CPU XLA -- for the deterministic global-buffer
+routers; the immediate/randomized routers must keep their per-event
+lifecycle reads and gain only the write-only deferrals.
+
 **Documented deviations** from the Python oracle (all measure-zero or
 deadline-only; the equivalence tests quantify them):
 
@@ -106,7 +128,10 @@ deadline-only; the equivalence tests quantify them):
 
 Not supported (use the Python engine): server failures/recoveries,
 stragglers, the online controller (rolling-window replanning), and
-``record_queues_every`` traces.
+``record_queues_every`` traces.  Replays beyond the host-padded-table
+memory ceiling live in :mod:`repro.serving.engine_stream`
+(:class:`StreamingEngineJAX`), which drives this same step function
+over a compacted working-set window fed by trace chunks.
 """
 
 from __future__ import annotations
@@ -186,10 +211,14 @@ def iteration_budget(tt: TraceTensors, cfg: EngineConfig, h_eff: float,
     return A + int(np.ceil(min(pathwise, clock))) + 16
 
 
+_FFWD_JMAX = 64  # boundaries scanned per fast-forward window (per step)
+
+
 def _build_step(params: dict, key, *, n: int, B: int, gate_kind: str,
                 router_kind: str, charging: str, partition: str,
                 sarathi: bool, unchunked: bool, prefill_only: bool,
-                has_pw: bool, expiry: bool, model_kind: str = "affine"):
+                has_pw: bool, expiry: bool, model_kind: str = "affine",
+                k_events: int = 1, fastforward: bool = False):
     dtype = params["t_arr"].dtype
     R = params["t_arr"].shape[0]
     I = params["x_star"].shape[0]
@@ -208,6 +237,17 @@ def _build_step(params: dict, key, *, n: int, B: int, gate_kind: str,
     fast_st = router_kind in ("solo_first", "local_fcfs")
     need_tbuf = (expiry or router_kind == "immediate"
                  or (router_kind == "randomized" and has_pw))
+    # k-event blocks additionally defer the write-only t_first/t_last
+    # scatters and (fast routers) the buf-ring pushes across the whole
+    # block, and swap the (R,) resident-token array for a dense (n, B)
+    # per-slot counter -- see the module docstring; bitwise-identical
+    # to k single-event steps
+    multi = k_events > 1
+    if fastforward and not (fast_st and model_kind == "affine"):
+        raise ValueError("fastforward needs a deterministic global-buffer "
+                         "router (solo_first/local_fcfs) and the affine "
+                         "iteration-time model")
+    dense_tout = fast_st and (multi or fastforward)
 
     def f(b):
         return b.astype(dtype)
@@ -264,7 +304,8 @@ def _build_step(params: dict, key, *, n: int, B: int, gate_kind: str,
         occupied = c["slot_rid"] >= 0
         src = rc(c["slot_rid"])
         pfr = rc(c["pf_rid"])
-        kv = (jnp.sum(jnp.where(occupied, P[src] + c["tout"][src], 0.0),
+        tout_res = c["slot_tout"] if dense_tout else c["tout"][src]
+        kv = (jnp.sum(jnp.where(occupied, P[src] + tout_res, 0.0),
                       axis=1)
               + jnp.where(has_pf, P[pfr] - pl, 0.0))
         if model_kind == "table":
@@ -285,8 +326,164 @@ def _build_step(params: dict, key, *, n: int, B: int, gate_kind: str,
         c["slot_live"] = c["slot_live"] | (do[:, None] & occupied)
         return c
 
-    def step(carry, idx):
-        c = dict(carry)
+    # stacked per-request constants so ffwd pays one gather where it
+    # would otherwise pay two (class ids are tiny, exact in float32)
+    DP2 = jnp.stack([D, P])
+    AC2 = jnp.stack([t_arr, f(cls)])
+
+    def ffwd(c):
+        """Retire a batch of non-interacting events in closed form.
+
+        Between two *interaction* events (an arrival, a decode
+        completion, a prefill finish -- the only transitions that can
+        change queue/dispatch/admission state, by the dispatch-window
+        and one-admission-per-event invariants the step maintains),
+        every busy server just runs iterations that emit decode tokens
+        and advance prefill chunks.  Those boundary events are
+        independent across servers and deterministic, so this block
+        advances each batchable server over all its boundaries that lie
+        strictly before every pending interaction (and before the next
+        arrival, and at or before the horizon) in one shot: token
+        counters move by ``j`` on the dense per-slot array, first-token
+        times scatter once with the exact first-boundary time, and
+        ``t_next`` lands on the closed-form partial sum of the
+        iteration-time series (constant ``alpha + beta*chunk`` for a
+        mid-prefill server; the arithmetic series ``tau_solo + b_s *
+        (kv0 + i*L)`` for a decode server whose KV grows by ``L`` per
+        iteration).  Results match the one-event path exactly up to
+        float summation order (the partial sum replaces ``j`` chained
+        additions); the event *sequence* is identical.  A server with a
+        freshly-placed, not-yet-woken resident (``slot_live`` false) or
+        an in-flight partial chunk boundary is simply not batchable
+        this window and is processed by the normal path instead.
+        """
+        t0 = c["t_next"]  # (n,) first-boundary times (exact)
+        occ = c["slot_rid"] >= 0
+        L = jnp.sum(f(occ), axis=1)
+        rr2 = rc(c["slot_rid"])
+        dp = DP2[:, rr2]  # one gather serves both D and P lookups
+        # tokens to the earliest resident completion (>= 1 by
+        # invariant); a not-yet-woken resident poisons the min to -inf
+        # so d > 0 doubles as the all-residents-live check
+        d = jnp.min(jnp.where(occ,
+                              jnp.where(c["slot_live"],
+                                        dp[0] - c["slot_tout"], -inf),
+                              inf), axis=1)
+        has_pf = c["pf_rid"] >= 0
+        pl, chn = c["pf_left"], c["chunk"]
+        kv0 = jnp.sum(jnp.where(occ, dp[1] + c["slot_tout"], 0.0),
+                      axis=1)
+        tau_pf = params["alpha"] + params["beta"] * chn
+        a_s, b_s = params["tau_solo"], params["b_s"]
+
+        def T(j):  # time of boundary index j (j = 0 -> t_next)
+            dec = j * a_s + b_s * (j * kv0 + L * j * (j - 1.0) / 2.0)
+            return t0 + jnp.where(has_pf, j * tau_pf, dec)
+
+        # first interaction boundary per server: earliest completion
+        # (j = d-1) or the chunk that finishes the prefill
+        jC = d - 1.0
+        jF = jnp.ceil(pl / jnp.maximum(chn, 1.0)) - 1.0
+        jint = jnp.where(has_pf, jnp.minimum(jC, jF), jC)
+        okb = (c["busy"] & (d > 0.0)
+               & jnp.where(has_pf, chn > 0, True))
+        # step 4 admits at most ONE queued prefill per event, so a
+        # waiting head plus an admission-capable server means the very
+        # next event -- whatever it is -- performs an admission: every
+        # boundary is then an interaction and the window must be empty.
+        # (Dispatch needs no such guard: after any event the ring is
+        # empty or decode capacity is, and neither changes in-window.)
+        qlen0 = f(c["qarr"] - c["qhead"])
+        no_pf0 = c["pf_rid"] < 0
+        if partition == "none":
+            canp0 = no_pf0 & (L < params["B"])
+            if sarathi:
+                canp0 = canp0 & (L < params["B"] - 1.0)
+        else:
+            canp0 = ((sid < params["Mi"]) & no_pf0
+                     & (L <= params["B"] - 1.0))
+        if gate_kind == "occupancy":
+            waiting = (qlen0 >= 1) & (params["x_star"] > _EPS_TARGET)
+        else:
+            waiting = qlen0 >= 1
+        blocked = canp0.any() & waiting.any()
+        if expiry:  # lazy head-expiry also fires once per event
+            blocked = blocked | (qlen0 >= 1).any()
+        okb = okb & ~blocked
+        jint = jnp.where(okb, jnp.maximum(jint, 0.0), 0.0)
+        t_int = jnp.where(okb, T(jint), t0)  # non-batchable: t_next
+        t_imin = t_int.min()
+        # one lookahead gather serves both the next-arrival bound
+        # (its first lane) and the arrival batch below
+        a0 = c["aptr"]
+        aw = a0 + jnp.arange(_FFWD_JMAX, dtype=a0.dtype)
+        acw = AC2[:, rc(aw)]  # one gather serves t_arr and cls lookups
+        taw = jnp.where(f(aw) < params["A"], acw[0], inf)
+        ta0 = taw[0]
+        # with no admission-capable server, an arrival merely joins its
+        # class queue -- it cannot admit, dispatch, or wake anything --
+        # so arrivals and boundaries commute and neither caps the other
+        no_adm = (jnp.zeros((), bool) if expiry
+                  else ~canp0.any())
+        t_cap = jnp.where(no_adm, t_imin, jnp.minimum(ta0, t_imin))
+        if "frontier" in params:
+            # streamed replay: never batch past the next chunk's splice
+            # point (its arrivals are not loaded yet, so ta0 is blind to
+            # them); the segment loop stops there, ffwd must too
+            t_cap = jnp.minimum(t_cap, params["frontier"])
+        jj = jnp.arange(_FFWD_JMAX, dtype=dtype)[None, :]
+        Tj = (t0[:, None]
+              + jnp.where(has_pf[:, None], jj * tau_pf[:, None],
+                          jj * a_s + b_s * (jj * kv0[:, None]
+                                            + L[:, None] * jj
+                                            * (jj - 1.0) / 2.0)))
+        # batchable boundaries: strictly before every interaction and
+        # the next arrival (arrival-first tie-break preserved), at or
+        # before the horizon (events at h_eff are processed), strictly
+        # before this server's own interaction boundary
+        okj = (Tj < t_cap) & (Tj <= params["h_eff"]) & (jj < jint[:, None])
+        j_s = jnp.where(okb, jnp.sum(f(okj), axis=1), 0.0)
+        adv = j_s > 0
+        # post-window state, computed exactly like the per-boundary wake
+        pl2 = pl - j_s * chn
+        chn2 = pl2 if unchunked else (
+            jnp.clip(params["C"] - L, 0.0, pl2) if sarathi
+            else jnp.minimum(pl2, params["C"]))
+        tau2 = jnp.where(has_pf, params["alpha"] + params["beta"] * chn2,
+                         a_s + b_s * (kv0 + j_s * L))
+        t_last_b = T(j_s - 1.0)  # last batched boundary time
+        c["t_next"] = jnp.where(adv, t_last_b + tau2, c["t_next"])
+        c["pf_left"] = jnp.where(adv & has_pf, pl2, c["pf_left"])
+        c["chunk"] = jnp.where(adv & has_pf, chn2, c["chunk"])
+        emit = occ & adv[:, None]
+        c["slot_tout"] = c["slot_tout"] + f(emit) * j_s[:, None]
+        c["t_first"] = c["t_first"].at[rr2].min(
+            jnp.where(emit, t0[:, None], inf))
+        nb = jnp.sum(j_s)
+        c["n_iters"] = c["n_iters"] + nb
+        c["n_events"] = c["n_events"] + nb
+        c["t"] = jnp.maximum(c["t"], jnp.where(adv, t_last_b,
+                                               -jnp.inf).max())
+        if not expiry:
+            # queue-only arrival batch: every arrival strictly before
+            # the earliest pending interaction (they stay QUEUED -- no
+            # admission is possible until a server frees up, which is
+            # itself an interaction).  t_arr is sorted, so the mask is
+            # a prefix of the lookahead window.
+            okm = no_adm & (taw < t_imin)
+            m_arr = jnp.sum(jnp.where(okm, 1, 0))
+            c["aptr"] = a0 + m_arr.astype(a0.dtype)
+            c["st"] = c["st"].at[rc(aw)].max(jnp.where(okm, _QUEUED, -1))
+            c["qarr"] = c["qarr"].at[acw[1].astype(jnp.int32)].add(
+                jnp.where(okm, 1, 0))
+            c["n_events"] = c["n_events"] + f(m_arr)
+            c["t"] = jnp.maximum(c["t"],
+                                 jnp.where(okm, taw, -jnp.inf).max())
+        return c
+
+    def event(c, idx, dfr):
+        # ``dfr`` holds the cross-event deferred (R,)-scatter buffers of
+        # the enclosing k-block (None in the single-event body)
         u = (jax.random.uniform(jax.random.fold_in(key, idx),
                                 (2 * W + 1,), dtype=dtype)
              if router_kind == "randomized" else None)
@@ -294,10 +491,29 @@ def _build_step(params: dict, key, *, n: int, B: int, gate_kind: str,
 
         def st_max(c, idx_, val_):
             if fast_st:
-                st_idx.append(jnp.atleast_1d(idx_.astype(jnp.int32)))
-                st_val.append(jnp.atleast_1d(val_.astype(jnp.int32)))
+                tgt_i = dfr["st_i"] if multi else st_idx
+                tgt_v = dfr["st_v"] if multi else st_val
+                tgt_i.append(jnp.atleast_1d(idx_.astype(jnp.int32)))
+                tgt_v.append(jnp.atleast_1d(val_.astype(jnp.int32)))
             else:
                 c["st"] = c["st"].at[idx_].max(val_)
+            return c
+
+        def mark_first(c, idx_, val_):
+            # t_first is write-only in-step: scatter-min defers k-wide
+            if multi:
+                dfr["tf_i"].append(jnp.atleast_1d(idx_))
+                dfr["tf_v"].append(jnp.atleast_1d(val_))
+            else:
+                c["t_first"] = c["t_first"].at[idx_].min(val_)
+            return c
+
+        def mark_last(c, idx_, val_):
+            if multi:
+                dfr["tl_i"].append(jnp.atleast_1d(idx_))
+                dfr["tl_v"].append(jnp.atleast_1d(val_))
+            else:
+                c["t_last"] = c["t_last"].at[idx_].max(val_)
             return c
 
         # ---- next event: earliest arrival vs earliest iteration end ----
@@ -307,6 +523,10 @@ def _build_step(params: dict, key, *, n: int, B: int, gate_kind: str,
         tsv = c["t_next"][se]
         now = jnp.minimum(ta, tsv)
         active = now <= params["h_eff"]
+        if "frontier" in params:
+            # streamed replay: an event at/after the next chunk's splice
+            # point could interact with arrivals not loaded yet
+            active = active & (now < params["frontier"])
         is_arr = active & (ta <= tsv)  # heap pushes arrivals first: ties
         is_iter = active & ~is_arr     # resolve arrival-before-iteration
 
@@ -327,10 +547,15 @@ def _build_step(params: dict, key, *, n: int, B: int, gate_kind: str,
         row = c["slot_rid"][se]
         rr = rc(row)
         live = is_iter & (row >= 0) & c["slot_live"][se]
-        tout_new = c["tout"][rr] + 1.0  # live slots hold distinct rids
-        c["tout"] = c["tout"].at[rr].add(f(live))
-        c["t_first"] = c["t_first"].at[rr].min(jnp.where(live, now, inf))
-        c["t_last"] = c["t_last"].at[rr].max(jnp.where(live, now, -inf))
+        if dense_tout:  # per-slot counter: zero request-axis traffic
+            tout_new = c["slot_tout"][se] + 1.0
+            c["slot_tout"] = c["slot_tout"] + f(at_se[:, None]
+                                                & live[None, :])
+        else:
+            tout_new = c["tout"][rr] + 1.0  # live slots hold distinct rids
+            c["tout"] = c["tout"].at[rr].add(f(live))
+        c = mark_first(c, rr, jnp.where(live, now, inf))
+        c = mark_last(c, rr, jnp.where(live, now, -inf))
         done = live & (tout_new >= D[rr])
         if charging == "separate":
             reward = params["c_d"] * D[rr]
@@ -380,7 +605,16 @@ def _build_step(params: dict, key, *, n: int, B: int, gate_kind: str,
                 jnp.where(pf_done, se.astype(jnp.int32), c["srv"][pfc]))
         else:  # single global FCFS ring (solo_first / local_fcfs)
             tl = c["buf_tl"]
-            c["buf"] = c["buf"].at[tl].max(jnp.where(pf_done, pf, -1))
+            if multi:
+                # defer the (R+W,) ring write; `buf_tl` (a scalar) still
+                # advances immediately, and in-block pops overlay the
+                # pending pushes onto the dispatch window below.  A
+                # masked push (-1) may share its index with a later real
+                # one -- the flush scatter-max composes them.
+                dfr["push_i"].append(tl)
+                dfr["push_v"].append(jnp.where(pf_done, pf, -1))
+            else:
+                c["buf"] = c["buf"].at[tl].max(jnp.where(pf_done, pf, -1))
             c["buf_tl"] = tl + jnp.where(pf_done, 1, 0)
 
         # 3) decode dispatch.  For the deterministic global-buffer routers
@@ -394,6 +628,10 @@ def _build_step(params: dict, key, *, n: int, B: int, gate_kind: str,
         if router_kind in ("solo_first", "local_fcfs"):
             hd, tl = c["buf_hd"], c["buf_tl"]
             win = jax.lax.dynamic_slice(c["buf"], (hd,), (W,))
+            if multi:  # overlay this block's not-yet-flushed ring pushes
+                for ti, tv in zip(dfr["push_i"], dfr["push_v"]):
+                    win = jnp.where(hd + iota_W == ti,
+                                    jnp.maximum(win, tv), win)
             jw = rc(win)
             valid = (hd + iota_W < tl) & is_iter
             if expiry:
@@ -421,6 +659,9 @@ def _build_step(params: dict, key, *, n: int, B: int, gate_kind: str,
                                           0, B - 1)]
             c["slot_rid"] = c["slot_rid"].at[server, slot].max(
                 jnp.where(place, win, -1))
+            if dense_tout:  # fresh occupant: reset the per-slot counter
+                c["slot_tout"] = c["slot_tout"].at[server, slot].min(
+                    jnp.where(place, 0.0, jnp.inf))
             c = st_max(c, jw,
                        jnp.where(place, _DECODE,
                                  jnp.where(consumed & expired,
@@ -567,8 +808,9 @@ def _build_step(params: dict, key, *, n: int, B: int, gate_kind: str,
 
         # flush the deferred lifecycle transitions in ONE scatter-max
         # (codes are ordered along the lifecycle, so max composes even
-        # when one request transitions twice in a single event)
-        if fast_st:
+        # when one request transitions twice in a single event); k-event
+        # blocks flush once per block instead
+        if fast_st and not multi:
             c["st"] = c["st"].at[jnp.concatenate(st_idx)].max(
                 jnp.concatenate(st_val))
 
@@ -588,6 +830,41 @@ def _build_step(params: dict, key, *, n: int, B: int, gate_kind: str,
         c["alive"] = jnp.minimum(ta2, c["t_next"].min()) <= params["h_eff"]
         return c
 
+    if not multi:
+        def step(carry, idx):
+            c = dict(carry)
+            c["n_loop"] = c["n_loop"] + f(c["alive"])
+            if fastforward:
+                c = ffwd(c)
+            return event(c, idx, None)
+
+        return step
+
+    def step(carry, idx):
+        # idx is the BLOCK index; events keep their global index so the
+        # randomized router's fold_in stream is identical at every k
+        c = dict(carry)
+        c["n_loop"] = c["n_loop"] + f(c["alive"])
+        if fastforward:
+            c = ffwd(c)
+        dfr = {k2: [] for k2 in ("st_i", "st_v", "tf_i", "tf_v",
+                                 "tl_i", "tl_v", "push_i", "push_v")}
+        base = idx * jnp.uint32(k_events)
+        for j in range(k_events):
+            c = event(c, base + jnp.uint32(j), dfr)
+        # one combined flush per (R,) array for the whole block: max/min
+        # compose across events exactly like across transitions
+        if fast_st:
+            c["st"] = c["st"].at[jnp.concatenate(dfr["st_i"])].max(
+                jnp.concatenate(dfr["st_v"]))
+            c["buf"] = c["buf"].at[jnp.stack(dfr["push_i"])].max(
+                jnp.stack(dfr["push_v"]))
+        c["t_first"] = c["t_first"].at[jnp.concatenate(dfr["tf_i"])].min(
+            jnp.concatenate(dfr["tf_v"]))
+        c["t_last"] = c["t_last"].at[jnp.concatenate(dfr["tl_i"])].max(
+            jnp.concatenate(dfr["tl_v"]))
+        return c
+
     return step
 
 
@@ -599,7 +876,8 @@ def _count_pending(c, n, dtype):
 
 
 def _init_carry(R: int, n: int, B: int, I: int, dtype,
-                router_kind: str, has_pw: bool, expiry: bool) -> dict:
+                router_kind: str, has_pw: bool, expiry: bool,
+                k_events: int = 1, fastforward: bool = False) -> dict:
     W = B + 1
     c = {
         "st": jnp.zeros(R, jnp.int32),
@@ -621,6 +899,7 @@ def _init_carry(R: int, n: int, B: int, I: int, dtype,
         "rev": jnp.zeros((), dtype),
         "n_iters": jnp.zeros((), dtype),
         "n_events": jnp.zeros((), dtype),
+        "n_loop": jnp.zeros((), dtype),  # loop steps (batching factor)
         "abandons": jnp.zeros((), dtype),
         "alive": jnp.ones((), bool),
     }
@@ -632,6 +911,10 @@ def _init_carry(R: int, n: int, B: int, I: int, dtype,
         c["buf"] = jnp.full(R + W, -1, jnp.int32)
         c["buf_hd"] = jnp.zeros((), jnp.int32)
         c["buf_tl"] = jnp.zeros((), jnp.int32)
+        if k_events > 1 or fastforward:
+            # dense per-slot token counter (see _build_step)
+            del c["tout"]
+            c["slot_tout"] = jnp.zeros((n, B), dtype)
     elif router_kind == "randomized" and not has_pw:
         for ring in ("buf_s", "buf_m"):
             c[ring] = jnp.full(R + W, -1, jnp.int32)
@@ -646,34 +929,40 @@ def _init_carry(R: int, n: int, B: int, I: int, dtype,
 
 _STATICS = ("n_steps", "n", "B", "gate_kind", "router_kind", "charging",
             "partition", "sarathi", "unchunked", "prefill_only", "has_pw",
-            "expiry", "loop", "model_kind")
+            "expiry", "loop", "model_kind", "k_events", "fastforward")
 
 
 def _run_core(params, key, *, n_steps, n, B, gate_kind, router_kind,
               charging, partition, sarathi, unchunked, prefill_only,
-              has_pw, expiry, loop="while", model_kind="affine"):
+              has_pw, expiry, loop="while", model_kind="affine",
+              k_events=1, fastforward=False):
     step = _build_step(params, key, n=n, B=B, gate_kind=gate_kind,
                        router_kind=router_kind, charging=charging,
                        partition=partition, sarathi=sarathi,
                        unchunked=unchunked, prefill_only=prefill_only,
-                       has_pw=has_pw, expiry=expiry, model_kind=model_kind)
+                       has_pw=has_pw, expiry=expiry, model_kind=model_kind,
+                       k_events=k_events, fastforward=fastforward)
     R = params["t_arr"].shape[0]
     I = params["x_star"].shape[0]
     init = _init_carry(R, n, B, I, params["t_arr"].dtype,
-                       router_kind, has_pw, expiry)
+                       router_kind, has_pw, expiry, k_events, fastforward)
+    # the loop iterates over k-event BLOCKS; a final partial block runs
+    # its overhang as proven no-op events (is_arr/is_iter/admit all
+    # force False once no event is pending)
+    n_blocks = -(-int(n_steps) // int(k_events))
     if loop == "scan":  # strict fixed-shape form (profiling / coupling)
         def body(carry, idx):
             return step(carry, idx), None
 
         carry, _ = jax.lax.scan(body, init,
-                                jnp.arange(n_steps, dtype=jnp.uint32))
+                                jnp.arange(n_blocks, dtype=jnp.uint32))
         return carry
     # early-exit form: same step, same budget cap, but the loop stops as
     # soon as no event is pending before the horizon (the scan form pays
     # for its no-op tail; this one does not)
     def cond(state):
         carry, i = state
-        return carry["alive"] & (i < n_steps)
+        return carry["alive"] & (i < n_blocks)
 
     def body(state):
         carry, i = state
@@ -721,15 +1010,22 @@ class ClusterEngineJAX:
     ``max_steps`` caps the scan budget below the hard bound; the
     ``budget_exhausted`` diagnostic then reports whether the cap
     truncated the replay.  ``max_requests`` caps the tensorized trace
-    (``n_dropped`` reports the overflow).
+    (``n_dropped`` reports the overflow).  ``k_events`` unrolls the
+    multi-event hot path (k consecutive events per loop step with one
+    merged (R,)-scatter flush per block -- bitwise identical results,
+    see the module docstring); the default 1 keeps the historical
+    one-event body.
     """
 
     def __init__(self, classes: Sequence[WorkloadClass], policy: PolicySpec,
                  cfg: EngineConfig, trace, horizon: float, *,
                  drain: bool = False, max_steps: Optional[int] = None,
-                 max_requests: Optional[int] = None, loop: str = "while"):
+                 max_requests: Optional[int] = None, loop: str = "while",
+                 k_events: int = 1, fastforward: bool = False):
         if loop not in ("while", "scan"):
             raise ValueError(f"loop must be while|scan, got {loop!r}")
+        if int(k_events) < 1:
+            raise ValueError(f"k_events must be >= 1, got {k_events!r}")
         if cfg.record_queues_every > 0:
             raise ValueError("engine_jax does not record queue traces; "
                              "use the Python ClusterEngine")
@@ -765,6 +1061,13 @@ class ClusterEngineJAX:
                                  "randomized"):
             raise ValueError(f"unknown router {policy.router!r}")
         self.router_kind = policy.router
+        # fail at construction, not at first trace: _build_step re-checks
+        # but only when the jit cache misses
+        if fastforward and policy.router not in ("solo_first",
+                                                 "local_fcfs"):
+            raise ValueError(
+                "fastforward needs a deterministic global-buffer router "
+                f"(solo_first/local_fcfs), got {policy.router!r}")
         self.partition = "none" if policy.partition == "none" else "static"
         self.M = int(policy.mixed_target(self.n))
         pw_m, pw_s = policy.pool_weights_mixed, policy.pool_weights_solo
@@ -856,7 +1159,8 @@ class ClusterEngineJAX:
             # deadline machinery compiles away on the (default) traces
             # where every request has patience == inf
             expiry=bool(np.isfinite(tt.patience[arrived]).any()),
-            loop=loop, model_kind=self.model_kind)
+            loop=loop, model_kind=self.model_kind,
+            k_events=int(k_events), fastforward=bool(fastforward))
 
     # -- raw (device array) interface -------------------------------------
     def _key(self, seed):

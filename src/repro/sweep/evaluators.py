@@ -532,7 +532,9 @@ def evaluate_engine_jax_cells(ctx: MixContext, token: str, n: int,
     (requests cut by a ``max_requests`` cap).  Differences from the
     Python evaluator: the online controller is not supported, so
     ``gate_and_route`` runs open-loop on the static plan, and engine
-    kwargs (``max_steps``, ``max_requests``, ``drain``) come from
+    kwargs (``max_steps``, ``max_requests``, ``drain``, plus the hot-path
+    switches ``fastforward`` and ``k_events`` -- see the engine module
+    docstring for when each applies) come from
     ``spec.extra["engine_jax"]``.
     """
     from repro.serving.engine_jax import ClusterEngineJAX

@@ -42,6 +42,7 @@ __all__ = [
     "generate_batch",
     "batch_cell_tensors",
     "batch_cell_requests",
+    "ScenarioStream",
 ]
 
 _LEN_FLOOR_P, _LEN_FLOOR_D = 8, 2  # same floors as Scenario.generate
@@ -205,6 +206,152 @@ def generate_batch(scenarios: Sequence[Scenario], seeds: Sequence[int],
         "seeds": [int(s) for s in seeds],
     }
     return out
+
+
+class ScenarioStream:
+    """Stream one scenario's trace as fixed-shape on-device chunks.
+
+    :func:`generate_batch` materialises a whole ``(S, K, R)`` candidate
+    table up front, so its memory ceiling is the trace length.  This
+    stream draws the *same law* -- Lewis-Shedler thinning against the
+    scenario's rate bound, per-class lognormal lengths, an MMPP regime
+    path on the ``T``-point grid -- but hands out padded
+    :class:`TraceTensors` chunks of ``chunk_size`` *candidates* at a
+    time, so a streamed replay can consume millions of requests while
+    holding one chunk.
+
+    Chunk-size invariance (a metamorphic property the differential
+    tests pin down): every candidate draws its randomness from
+    ``fold_in(key, candidate_index)`` and the arrival clock accumulates
+    strictly left-to-right in float64 on the host, so the concatenation
+    of the emitted chunks is bitwise independent of ``chunk_size``.
+
+    ``next_chunk()`` returns ``None`` once the candidate clock passes
+    the horizon; the final real chunk may be partially filled (its
+    ``valid`` mask says how far).
+    """
+
+    def __init__(self, scenario: Scenario, seed: int,
+                 chunk_size: int = 4096, horizon: Optional[float] = None,
+                 T: int = 512, compression: float = 1.0,
+                 rate_scale: float = 1.0):
+        import jax
+        import jax.numpy as jnp
+
+        from repro.compat import prng_key
+
+        if chunk_size < 1:
+            raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+        self.scenario = scenario
+        self.chunk_size = int(chunk_size)
+        self.horizon = float(horizon if horizon is not None
+                             else scenario.horizon)
+        I = scenario.n_classes
+        K = (scenario.arrivals.n_regimes
+             if isinstance(scenario.arrivals, MMPPArrivals) else 1)
+        par = scenario_grid_params(scenario, self.horizon, T, I, K,
+                                   compression=compression,
+                                   rate_scale=rate_scale)
+        self._dt = self.horizon / T
+        self._T = int(T)
+        self._bound = max(float(par["rate_bound"]), 1e-9)
+        # one regime path per stream (the kernel's scan, emitted rate
+        # first, then the switch draw), sampled once so every chunk
+        # thins against the same intensity grid
+        if float(par["is_mmpp"]) > 0:
+            rng = np.random.default_rng(seed)
+            grid = np.empty(T)
+            j = 0
+            for b in range(T):
+                grid[b] = float(par["mmpp_base"] * par["mmpp_levels"][j])
+                p_switch = 1.0 - np.exp(-float(par["mmpp_switch"][j])
+                                        * self._dt)
+                if rng.uniform() < p_switch:
+                    j = 0 if j + 1 >= int(par["mmpp_k"]) else j + 1
+            self._rate_grid = grid
+        else:
+            self._rate_grid = par["rate_grid"].astype(np.float64)
+        shares = np.exp(par["share_log"].astype(np.float64))  # (T, I)
+        shares /= np.maximum(shares.sum(axis=1, keepdims=True), 1e-30)
+        self._cdf = np.cumsum(shares, axis=1)
+        self._mean_p = par["mean_p"].astype(np.float64)
+        self._mean_d = par["mean_d"].astype(np.float64)
+        self._cv_p = par["cv_p"].astype(np.float64)
+        self._cv_d = par["cv_d"].astype(np.float64)
+        self._patience = par["patience"].astype(np.float64)
+        self._key = prng_key(int(seed))
+        self._i0 = 0
+        self._t = 0.0
+        self._done = False
+        self.n_emitted = 0
+
+        C = self.chunk_size
+
+        def draws(key, i0):
+            def one(i):
+                k = jax.random.fold_in(key, i)
+                kg, ka, kc, kp, kd = jax.random.split(k, 5)
+                return (jax.random.exponential(kg),
+                        jax.random.uniform(ka),
+                        jax.random.uniform(kc),
+                        jax.random.normal(kp),
+                        jax.random.normal(kd))
+
+            return jax.vmap(one)(jnp.arange(C, dtype=jnp.uint32) + i0)
+
+        self._draw = jax.jit(draws)
+
+    @property
+    def exhausted(self) -> bool:
+        return self._done
+
+    def next_chunk(self) -> Optional[TraceTensors]:
+        if self._done:
+            return None
+        import jax.numpy as jnp
+
+        C = self.chunk_size
+        g, ua, uc, zp, zd = (np.asarray(x, dtype=np.float64)
+                             for x in self._draw(self._key,
+                                                 jnp.uint32(self._i0)))
+        self._i0 += C
+        # strict left-to-right accumulation including the carried clock:
+        # the association (and hence every bit) matches any chunking
+        times = np.add.accumulate(np.concatenate(([self._t], g / self._bound)))[1:]
+        self._t = float(times[-1])
+        bins = np.clip((times / self._dt).astype(np.int64), 0, self._T - 1)
+        accept = ((times < self.horizon)
+                  & (ua * self._bound < self._rate_grid[bins]))
+        cls = np.minimum((uc[:, None] >= self._cdf[bins]).sum(axis=1),
+                         self._cdf.shape[1] - 1)
+
+        def lengths(z, mean, cv, floor):
+            sigma2 = np.log1p(cv[cls] * cv[cls])
+            mu = np.log(mean[cls]) - sigma2 / 2
+            val = np.exp(mu + np.sqrt(sigma2) * z)
+            return np.maximum(floor, val.astype(np.int64)).astype(np.int32)
+
+        P = lengths(zp, self._mean_p, self._cv_p, _LEN_FLOOR_P)
+        D = lengths(zd, self._mean_d, self._cv_d, _LEN_FLOOR_D)
+        n = int(accept.sum())
+        t = np.full(C, np.inf)
+        cl = np.zeros(C, np.int32)
+        Pp = np.ones(C, np.int32)
+        Dd = np.ones(C, np.int32)
+        pat = np.full(C, np.inf)
+        valid = np.zeros(C, bool)
+        t[:n] = times[accept]
+        cl[:n] = cls[accept]
+        Pp[:n] = P[accept]
+        Dd[:n] = D[accept]
+        pat[:n] = self._patience[cls[accept]]
+        valid[:n] = True
+        self.n_emitted += n
+        if self._t >= self.horizon:
+            self._done = True
+        return TraceTensors(rid=np.arange(C, dtype=np.int32), t=t,
+                            cls=cl, P=Pp, D=Dd, patience=pat,
+                            valid=valid, n_real=n)
 
 
 def batch_cell_tensors(batch: dict, s: int, k: int) -> TraceTensors:

@@ -1,0 +1,334 @@
+"""Differential harness locking down the engine hot path.
+
+Three families of evidence that the multi-event/fast-forward kernels and
+the streamed replay are the *same simulator* as the one-event-per-step
+scan (and, transitively, the Python event loop):
+
+1. **Bitwise** -- ``k_events > 1`` replays every raw carry array
+   identically to ``k_events = 1`` (only ``n_loop``, which counts scan
+   steps, may differ: k events retire per step by construction).
+2. **Statistical** -- ``fastforward=True`` and the streamed engine agree
+   with their one-event twins *exactly* on discrete outcomes
+   (arrivals/completions) per trace, and with the Python
+   :class:`~repro.serving.engine_sim.ClusterEngine` oracle within CI
+   half-widths across independent traces.  Equivalence is measured
+   ACROSS TRACE SEEDS: on a fixed trace the deterministic policies are
+   PRNG-invariant, so per-seed spread degenerates to zero and any
+   comparison there is vacuous.
+3. **Metamorphic** (hypothesis) -- summaries are k-invariant, streamed
+   scenario traces are chunk-size-invariant, and conservation/capacity
+   laws hold under randomly drawn workloads.  These live in
+   ``test_engine_diff_properties.py`` (module-scope ``importorskip``
+   convention: they skip wholesale where hypothesis is absent, and this
+   module's deterministic families must not skip with them).
+
+Plus the registry regression riding along (every workload scenario
+replays its CI-size trace with ``budget_exhausted == 0``).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.planning import SLISpec, solve_bundled_lp
+from repro.core.policies import (baseline_distserve, baseline_sarathi,
+                                 baseline_vllm, gate_and_route,
+                                 sli_aware_policy)
+from repro.core.types import Pricing, ServicePrimitives, WorkloadClass
+from repro.data.traces import (TraceConfig, TraceValidationError,
+                               synth_azure_trace, tensorize_trace,
+                               trace_class_means)
+from repro.serving.engine_jax import ClusterEngineJAX
+from repro.serving.engine_sim import ClusterEngine, EngineConfig
+from repro.serving.engine_stream import StreamingEngineJAX, TraceChunkSource
+
+pytestmark = pytest.mark.sim
+
+PRIM = ServicePrimitives()
+PRICE = Pricing(0.1, 0.2)
+N = 8
+HORIZON = 25.0
+PAD = 512  # shared padded trace shape => one jit cache entry per leg
+
+POLICIES = {
+    "gate_and_route": gate_and_route,
+    "vllm": baseline_vllm,
+    "sarathi": baseline_sarathi,
+    "distserve": lambda plan: baseline_distserve(plan, 3),
+    "sli": sli_aware_policy,
+}
+
+_MK_CACHE = {}
+
+
+def _mk(seed=42, compression=0.2, horizon=HORIZON):
+    """(padded TraceTensors, raw trace, classes, plan) for one workload."""
+    key = (seed, compression, horizon)
+    if key not in _MK_CACHE:
+        trace = synth_azure_trace(TraceConfig(
+            horizon=horizon, base_rate=2.0, compression=compression,
+            seed=seed))
+        assert len(trace) <= PAD
+        means = trace_class_means(trace, 2)
+        classes = [WorkloadClass(nm, m[0], m[1], m[2] / N, patience=3e-4)
+                   for nm, m in zip(("code", "conv"), means)]
+        plan = solve_bundled_lp(classes, PRIM, PRICE,
+                                sli=SLISpec(pin_zero_decode_queue=True))
+        _MK_CACHE[key] = (tensorize_trace(trace, pad_to=PAD), trace,
+                          classes, plan)
+    return _MK_CACHE[key]
+
+
+def _jax(tt, classes, pol, horizon=HORIZON, **kw):
+    return ClusterEngineJAX(classes, pol,
+                            EngineConfig(PRIM, PRICE, n_servers=N),
+                            tt, horizon=horizon, **kw)
+
+
+def _half_width(vals):
+    return 1.96 * np.std(vals, ddof=1) / np.sqrt(len(vals))
+
+
+def _ci_close(a, b, label, rel_floor=0.0):
+    """CI-half-width agreement with an optional relative floor: when the
+    per-seed spread degenerates (a randomized policy whose coin flips
+    happen not to matter on a trace), the CI collapses below float32-vs-
+    float64 arithmetic drift and the comparison needs a drift-scale
+    floor to be meaningful."""
+    a, b = np.asarray(a, float), np.asarray(b, float)
+    tol = (2.0 * (_half_width(a) + _half_width(b)) + 1e-9
+           + rel_floor * max(abs(a.mean()), abs(b.mean())))
+    assert abs(a.mean() - b.mean()) <= tol, (
+        f"{label}: |{a.mean()} - {b.mean()}| > {tol}")
+
+
+# ---------------------------------------------------------------- bitwise
+
+@pytest.mark.parametrize("name,k", [
+    ("gate_and_route", 2), ("vllm", 2), ("sli", 2), ("distserve", 3),
+], ids=lambda v: str(v))
+def test_k_event_blocks_bitwise(name, k):
+    """k-event blocks replay the exact single-event trajectory: every
+    raw output array is bitwise identical except the scan-step counter
+    ``n_loop`` (k events per step by construction)."""
+    tt, _, classes, plan = _mk(seed=9, compression=0.3, horizon=20.0)
+    pol = POLICIES[name](plan)
+    a = _jax(tt, classes, pol, horizon=20.0).run_batch_raw([0, 1])
+    b = _jax(tt, classes, pol, horizon=20.0,
+             k_events=k).run_batch_raw([0, 1])
+    for key in set(a) & set(b):
+        if key == "n_loop":
+            assert (np.asarray(a[key]) >= np.asarray(b[key])).all()
+            continue
+        np.testing.assert_array_equal(np.asarray(a[key]),
+                                      np.asarray(b[key]), err_msg=key)
+    # the two resident-token representations describe the same state:
+    # dense (n, B) per-slot counters vs the (R,) per-request array
+    if "tout" in a and "slot_tout" in b:
+        slots = np.asarray(a["slot_rid"])
+        occ = slots >= 0
+        tout = np.take_along_axis(
+            np.asarray(a["tout"]), np.where(occ, slots, 0).reshape(
+                slots.shape[0], -1), axis=1).reshape(slots.shape)
+        np.testing.assert_array_equal(np.where(occ, tout, 0.0),
+                                      np.where(occ, np.asarray(
+                                          b["slot_tout"]), 0.0))
+
+
+# ------------------------------------------------------------ statistical
+
+@pytest.mark.parametrize("name", ["gate_and_route", "vllm", "distserve"])
+def test_fastforward_vs_single_event(name):
+    """Fast-forward replays the same arrivals per trace, the same
+    completions up to near-tie event-order flips (closed-form partial
+    sums vs chained float32 adds drift ~1e-4; on a saturated
+    no-admission-gate policy one flipped tie reorders a whole arrival
+    burst, moving a few completions across the horizon), and is
+    statistically indistinguishable on continuous metrics across
+    traces."""
+    rev, ttft = [], []
+    for s in range(6):
+        tt, _, classes, plan = _mk(seed=200 + s)
+        pol = POLICIES[name](plan)
+        m1 = _jax(tt, classes, pol).run(0)
+        mf = _jax(tt, classes, pol, fastforward=True).run(0)
+        assert mf["budget_exhausted"] == 0.0
+        assert mf["arrivals"] == m1["arrivals"]
+        assert mf["completions"] == pytest.approx(m1["completions"],
+                                                  rel=0.02, abs=3)
+        rev.append((m1["revenue_rate"], mf["revenue_rate"]))
+        ttft.append((m1["ttft_mean"], mf["ttft_mean"]))
+    for pairs, label in ((rev, "revenue_rate"), (ttft, "ttft_mean")):
+        _ci_close([p[0] for p in pairs], [p[1] for p in pairs], label)
+
+
+def test_fastforward_requires_deterministic_router():
+    """The closed-form window needs a deterministic global-buffer
+    router; randomized / immediate routers must be rejected loudly."""
+    tt, _, classes, plan = _mk(seed=9, compression=0.3, horizon=20.0)
+    for name in ("sli", "sarathi"):
+        with pytest.raises(ValueError, match="fastforward"):
+            _jax(tt, classes, POLICIES[name](plan), horizon=20.0,
+                 fastforward=True)
+
+
+@pytest.mark.parametrize("name,pykw,jkw", [
+    ("gate_and_route", {}, dict(fastforward=True)),
+    ("vllm", {}, dict(fastforward=True)),
+    ("distserve", {}, dict(fastforward=True)),
+    ("sarathi", dict(sarathi_budget=True), dict(k_events=2)),
+], ids=["gate_and_route", "vllm", "distserve", "sarathi"])
+def test_python_oracle_statistical(name, pykw, jkw):
+    """Hot-path engines match the Python event loop within CI
+    half-widths across independent traces (the oracle the pre-hot-path
+    engine was originally validated against)."""
+    rev, comp = [], []
+    for s in range(5):
+        tt, trace, classes, plan = _mk(seed=300 + s)
+        pol = POLICIES[name](plan)
+        m_py = ClusterEngine(classes, pol,
+                             EngineConfig(PRIM, PRICE, n_servers=N,
+                                          seed=1, **pykw)
+                             ).run(trace, horizon=HORIZON).summary()
+        m_jx = _jax(tt, classes, pol, **jkw).run(0)
+        assert m_jx["budget_exhausted"] == 0.0
+        assert m_py["arrivals"] == m_jx["arrivals"]
+        assert m_jx["completions"] == pytest.approx(m_py["completions"],
+                                                    rel=0.06, abs=3)
+        rev.append((m_py["revenue_rate"], m_jx["revenue_rate"]))
+        comp.append((m_py["completions"], m_jx["completions"]))
+    for pairs, label in ((rev, "revenue_rate"), (comp, "completions")):
+        _ci_close([p[0] for p in pairs], [p[1] for p in pairs], label)
+
+
+def test_python_oracle_statistical_sli():
+    """The randomized router compares across replications (same trace,
+    different PRNG streams -- here seeds genuinely matter) with the
+    k-event block engine on the jax side."""
+    tt, trace, classes, plan = _mk(seed=11)
+    pol = POLICIES["sli"](plan)
+    reps = 8
+    r_py = [ClusterEngine(classes, pol,
+                          EngineConfig(PRIM, PRICE, n_servers=N, seed=s)
+                          ).run(trace, horizon=HORIZON).revenue_rate()
+            for s in range(reps)]
+    jeng = _jax(tt, classes, pol, k_events=2)
+    r_jx = [m["revenue_rate"] for m in jeng.run_batch(range(reps))]
+    _ci_close(r_py, r_jx, "revenue_rate", rel_floor=1e-5)
+
+
+# -------------------------------------------------------------- streaming
+
+@pytest.mark.parametrize("name", ["gate_and_route", "vllm"])
+@pytest.mark.parametrize("chunk", [64, 160])
+def test_stream_matches_batch(name, chunk):
+    """A chunk-fed streamed replay reproduces the host-padded drain-mode
+    replay of the same trace: same arrivals/completions, float-noise
+    agreement on the continuous metrics."""
+    _, trace, classes, plan = _mk(seed=7, compression=0.3, horizon=30.0)
+    pol = POLICIES[name](plan)
+    ref = ClusterEngineJAX(classes, pol,
+                           EngineConfig(PRIM, PRICE, n_servers=N),
+                           tensorize_trace(_strip_patience(trace)),
+                           horizon=30.0, drain=True,
+                           fastforward=True).run(0)
+    se = StreamingEngineJAX(classes, pol,
+                            EngineConfig(PRIM, PRICE, n_servers=N),
+                            horizon=30.0, window=PAD)
+    s = se.run_stream(TraceChunkSource(_strip_patience(trace),
+                                       chunk_size=chunk), seed=0)
+    assert s["arrivals"] == ref["arrivals"]
+    assert s["completions"] == ref["completions"]
+    assert s["abandons"] == ref["abandons"]
+    assert s["budget_exhausted"] == 0.0
+    assert s["revenue_rate"] == pytest.approx(ref["revenue_rate"],
+                                              rel=1e-5)
+    assert s["ttft_mean"] == pytest.approx(ref["ttft_mean"], rel=1e-4)
+    assert s["n_segments"] >= 2  # the test actually crossed a seam
+
+
+def _strip_patience(trace):
+    return [type(r)(rid=r.rid, t_arrival=r.t_arrival, cls=r.cls,
+                    prompt_len=r.prompt_len, decode_len=r.decode_len,
+                    patience=float("inf")) for r in trace]
+
+
+def test_stream_source_validation():
+    """Seam and shape defects fail loudly, never silently reorder."""
+    _, trace, classes, plan = _mk(seed=7, compression=0.3, horizon=30.0)
+    trace = _strip_patience(trace)
+    from repro.data.traces import chunk_trace
+    chunks = chunk_trace(trace, 64)
+    se = StreamingEngineJAX(classes, POLICIES["vllm"](plan),
+                            EngineConfig(PRIM, PRICE, n_servers=N),
+                            horizon=30.0, window=PAD)
+    with pytest.raises(TraceValidationError, match="order"):
+        se.run_stream(iter_chunks(chunks[::-1]))
+    with pytest.raises(TraceValidationError, match="shape"):
+        TraceChunkSource([chunks[0], tensorize_trace(trace, pad_to=256)])
+    # randomized routers cannot stream (no deterministic compaction)
+    with pytest.raises(ValueError, match="router"):
+        StreamingEngineJAX(classes, POLICIES["sli"](plan),
+                           EngineConfig(PRIM, PRICE, n_servers=N),
+                           horizon=30.0, window=PAD)
+    # deadlines are not modelled by the compactor
+    finite = [type(r)(rid=r.rid, t_arrival=r.t_arrival, cls=r.cls,
+                      prompt_len=r.prompt_len, decode_len=r.decode_len,
+                      patience=0.5) for r in trace]
+    with pytest.raises(ValueError, match="patience"):
+        se.run_stream(TraceChunkSource(finite, chunk_size=64))
+
+
+class iter_chunks:
+    def __init__(self, chunks):
+        self._it = iter(chunks)
+
+    def next_chunk(self):
+        return next(self._it, None)
+
+
+def test_stream_window_overflow_is_loud():
+    """An undersized working set raises instead of dropping load."""
+    _, trace, classes, plan = _mk(seed=7, compression=0.3, horizon=30.0)
+    se = StreamingEngineJAX(classes, POLICIES["vllm"](plan),
+                            EngineConfig(PRIM, PRICE, n_servers=N),
+                            horizon=30.0, window=16)
+    with pytest.raises(RuntimeError, match="window"):
+        se.run_stream(TraceChunkSource(_strip_patience(trace),
+                                       chunk_size=64), seed=0)
+
+
+# --------------------------------------------- registry regression (tier-1)
+
+def test_registry_scenarios_budget_not_exhausted():
+    """Every workload-registry scenario replays its CI-size trace to the
+    horizon: the scan budget must never truncate the simulation, with
+    the streamed generator-fed path used wherever it applies (infinite
+    patience) and the host-padded engine covering the deadline
+    scenarios."""
+    from repro.workloads import get_scenario, list_scenarios
+    from repro.workloads.batch import ScenarioStream
+
+    horizon = 60.0
+    for nm in list_scenarios():
+        sc = get_scenario(nm)
+        shares = np.array([p.share for p in sc.profiles])
+        shares = shares / shares.sum()
+        classes = [WorkloadClass(p.name, int(p.mean_prompt),
+                                 int(p.mean_decode),
+                                 max(float(2.0 * sh / 6), 1e-3))
+                   for p, sh in zip(sc.profiles, shares)]
+        plan = solve_bundled_lp(classes, PRIM, PRICE)
+        cfg = EngineConfig(PRIM, PRICE, n_servers=6)
+        streamable = all(np.isinf(p.patience) for p in sc.profiles)
+        if streamable:
+            eng = StreamingEngineJAX(classes, gate_and_route(plan), cfg,
+                                     horizon=horizon, window=4096)
+            m = eng.run_stream(ScenarioStream(sc, seed=0, chunk_size=512,
+                                              horizon=horizon), seed=0)
+        else:
+            trace = sc.generate(seed=0, horizon=horizon)
+            m = ClusterEngineJAX(classes, gate_and_route(plan), cfg,
+                                 tensorize_trace(trace),
+                                 horizon=horizon).run(0)
+        assert m["budget_exhausted"] == 0.0, nm
+        assert m["arrivals"] > 0, nm

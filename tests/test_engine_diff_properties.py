@@ -1,0 +1,119 @@
+"""Hypothesis metamorphic properties for the engine hot path.
+
+Companion to ``test_engine_diff.py`` (same module split as the other
+``*_properties`` files: module-scope importorskip, so environments
+without hypothesis skip these wholesale while the deterministic
+differential families still run).
+
+Properties: engine summaries are invariant to the multi-event block size
+``k_events``; the on-device scenario stream emits a bitwise
+chunk-size-invariant trace; lifecycle conservation and slot-capacity
+laws hold on randomly drawn workloads under the fast-forward kernel.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.planning import SLISpec, solve_bundled_lp
+from repro.core.policies import gate_and_route
+from repro.core.types import Pricing, ServicePrimitives, WorkloadClass
+from repro.data.traces import (TraceConfig, synth_azure_trace,
+                               tensorize_trace, trace_class_means)
+from repro.serving.engine_jax import ClusterEngineJAX
+from repro.serving.engine_sim import EngineConfig
+
+pytestmark = pytest.mark.sim
+
+hypothesis = pytest.importorskip(
+    "hypothesis")  # property tests need hypothesis; skip where absent
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+PRIM = ServicePrimitives()
+PRICE = Pricing(0.1, 0.2)
+N = 8
+PAD = 512  # shared padded shape => one jit cache entry per leg
+
+_MK_CACHE = {}
+
+
+def _mk(seed, compression=0.25, horizon=25.0):
+    key = (seed, compression, horizon)
+    if key not in _MK_CACHE:
+        trace = synth_azure_trace(TraceConfig(
+            horizon=horizon, base_rate=2.0, compression=compression,
+            seed=seed))
+        assert len(trace) <= PAD
+        means = trace_class_means(trace, 2)
+        classes = [WorkloadClass(nm, m[0], m[1], m[2] / N, patience=3e-4)
+                   for nm, m in zip(("code", "conv"), means)]
+        plan = solve_bundled_lp(classes, PRIM, PRICE,
+                                sli=SLISpec(pin_zero_decode_queue=True))
+        _MK_CACHE[key] = (tensorize_trace(trace, pad_to=PAD), classes, plan)
+    return _MK_CACHE[key]
+
+
+def _jax(tt, classes, pol, horizon, **kw):
+    return ClusterEngineJAX(classes, pol,
+                            EngineConfig(PRIM, PRICE, n_servers=N),
+                            tt, horizon=horizon, **kw)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 500), st.sampled_from([2, 3]))
+def test_summary_k_invariance(seed, k):
+    """Summaries are invariant to the block size k on random workloads
+    (``n_steps`` counts blocks and is excluded by construction)."""
+    tt, classes, plan = _mk(1000 + seed, compression=0.3, horizon=20.0)
+    pol = gate_and_route(plan)
+    a = _jax(tt, classes, pol, 20.0).run(0)
+    b = _jax(tt, classes, pol, 20.0, k_events=k).run(0)
+    assert set(a) == set(b)
+    for key in a:
+        if key == "n_steps":
+            continue
+        assert a[key] == b[key], key
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**16), st.sampled_from([(64, 256), (128, 512)]),
+       st.sampled_from(["azure_2023", "rate_shift", "diurnal"]))
+def test_scenario_stream_chunk_size_invariance(seed, sizes, name):
+    """The on-device generator emits the same trace whatever the chunk
+    size: per-candidate ``fold_in`` randomness plus a host-side float64
+    left-to-right arrival clock make the concatenation bitwise equal."""
+    from repro.workloads import get_scenario
+    from repro.workloads.batch import ScenarioStream
+
+    def collect(csz):
+        s = ScenarioStream(get_scenario(name), seed=seed, chunk_size=csz,
+                           horizon=40.0)
+        rows = []
+        while (ch := s.next_chunk()) is not None:
+            rows.append(np.stack([ch.t[ch.valid], ch.cls[ch.valid],
+                                  ch.P[ch.valid], ch.D[ch.valid]]))
+        return np.concatenate(rows, axis=1)
+
+    np.testing.assert_array_equal(collect(sizes[0]), collect(sizes[1]))
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 500))
+def test_conservation_and_capacity_property(seed):
+    """On random workloads the fast-forward kernel preserves lifecycle
+    invariants: arrivals partition into live+terminal states, decode
+    residency stays within slot caps, completions never exceed
+    arrivals."""
+    tt, classes, plan = _mk(2000 + seed)
+    jeng = _jax(tt, classes, gate_and_route(plan), 25.0, fastforward=True)
+    raw = {k: np.asarray(v) for k, v in jeng.run_raw(0).items()}
+    stl = raw["st"]
+    arrived = int((stl != 0).sum())
+    assert arrived == int(tt.valid[tt.t <= jeng.h_eff].sum())
+    assert np.isin(stl[stl != 0], [1, 2, 3, 4, 5, 6]).all()
+    slots = raw["slot_rid"]
+    resident = slots[slots >= 0]
+    assert len(set(resident)) == resident.size
+    assert (stl[resident] == 4).all()
+    assert slots.shape == (N, PRIM.batch_cap)
+    assert int((stl == 5).sum()) <= arrived
+    assert raw["n_events"] >= arrived

@@ -239,6 +239,22 @@ def test_scenario_axis_sweep_engine_jax(tmp_path):
     validate_payload(json.loads(path.read_text()))
 
 
+def test_engine_jax_evaluator_hot_path_extra():
+    """The hot-path switches (``k_events``, ``fastforward``) flow through
+    ``spec.extra["engine_jax"]`` into the engine and replay the same
+    arrivals as the default one-event path."""
+    kw = dict(evaluator="engine_jax", policies=("gate_and_route",),
+              n_servers=(4,), n_seeds=1, horizon=10.0, warmup=0.0,
+              mixes=(default_mix("two_class"),))
+    base = run_sweep(small_spec(**kw))
+    hot = run_sweep(small_spec(
+        **kw, extra={"engine_jax": {"k_events": 2, "fastforward": True}}))
+    assert len(base.cells) == len(hot.cells) == 1
+    assert (hot.cells[0].metrics["arrivals"]
+            == base.cells[0].metrics["arrivals"])
+    assert hot.cells[0].metrics["budget_exhausted"] == 0.0
+
+
 def test_cli_scenarios_flag_requires_engine_evaluator(tmp_path):
     from repro.sweep.run import main
 

@@ -8,9 +8,9 @@ import numpy as np
 import pytest
 
 from repro.data.traces import (Request, TraceConfig, TraceValidationError,
-                               load_trace_csv, synth_azure_trace,
-                               tensorize_trace, untensorize_trace,
-                               validate_requests)
+                               chunk_trace, concat_chunks, load_trace_csv,
+                               synth_azure_trace, tensorize_trace,
+                               untensorize_trace, validate_requests)
 
 hypothesis = pytest.importorskip(
     "hypothesis")  # property tests need hypothesis; skip where absent
@@ -118,6 +118,47 @@ def test_validate_rejects_bad_fields(bad, msg):
 def test_synth_trace_passes_validation():
     trace = synth_azure_trace(TraceConfig(horizon=5.0, compression=0.5))
     validate_requests(trace)  # idempotent: synth already validates
+
+
+# ---------------------------------------------------------------------------
+# Chunked TraceTensors (streamed-replay input format)
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(traces(), st.integers(1, 17))
+def test_chunk_concat_roundtrip(reqs, chunk_size):
+    """concat(chunk(reqs)) is the unchunked tensorization, whatever the
+    chunk size -- requests crossing chunk boundaries included."""
+    chunks = chunk_trace(reqs, chunk_size)
+    assert all(c.R == chunk_size for c in chunks)
+    assert sum(c.n_real for c in chunks) == len(reqs)
+    whole = concat_chunks(chunks)
+    ref = tensorize_trace(reqs)
+    assert whole.n_real == ref.n_real
+    for field in ("t", "cls", "P", "D", "patience", "valid"):
+        np.testing.assert_array_equal(
+            getattr(whole, field)[:whole.n_real],
+            getattr(ref, field)[:ref.n_real], err_msg=field)
+
+
+def test_chunk_trace_shapes_and_edges():
+    reqs = [Request(k, float(k), 0, 10, 5) for k in range(5)]
+    assert len(chunk_trace(reqs, 2)) == 3  # last chunk half-empty
+    assert chunk_trace(reqs, 2)[-1].n_real == 1
+    empty = chunk_trace([], 4)
+    assert len(empty) == 1 and empty[0].n_real == 0  # one all-pad chunk
+    with pytest.raises(ValueError, match="chunk_size"):
+        chunk_trace(reqs, 0)
+
+
+def test_concat_rejects_nonmonotone_seams():
+    a = chunk_trace([Request(0, 5.0, 0, 10, 5)], 2)[0]
+    b = chunk_trace([Request(0, 1.0, 0, 10, 5)], 2)[0]
+    with pytest.raises(TraceValidationError):
+        concat_chunks([a, b])
+    with pytest.raises(TraceValidationError):
+        concat_chunks([])
 
 
 def test_csv_loader_validates(tmp_path):

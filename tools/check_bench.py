@@ -46,6 +46,9 @@ ARTIFACTS = {
     "engine_speed": dict(bench="bench_engine_speed", committed=True,
                          required=["speedup", "iters_per_sec_jax",
                                    "iters_per_sec_python",
+                                   "events_per_sec_legacy",
+                                   "events_per_sec_hot", "speedup_hot",
+                                   "stream", "mode",
                                    "budget_exhausted"]),
     "frontier": dict(bench="bench_frontier", required=[]),
     "matched": dict(bench="bench_matched", required=[]),
@@ -102,6 +105,36 @@ def iter_budget_keys(obj, path=""):
             yield from iter_budget_keys(v, f"{path}[{i}]")
 
 
+def check_engine_speed(payload: dict) -> list:
+    """Numeric gates for the hot-path micro-benchmark.
+
+    The committed artifact is produced in ``--full`` mode and promises
+    the PR-level bars: >= 5x events/sec over the pre-hot-path engine
+    and a streamed replay of >= 1e6 requests on a fixed working set.
+    CI's ``bench-smoke`` regenerates the file in quick mode (smaller
+    trace, short stream), so the quick bars are a regression canary
+    with headroom for runner noise, not the headline.
+    """
+    errors = []
+    full = payload.get("mode") == "full"
+    floor = 5.0 if full else 3.0
+    hot = payload.get("speedup_hot")
+    if isinstance(hot, (int, float)) and hot < floor:
+        errors.append(
+            f"speedup_hot = {hot:.2f} < {floor} ({payload.get('mode')} "
+            f"mode): the multi-event hot path regressed")
+    stream = payload.get("stream")
+    if isinstance(stream, dict):
+        req = stream.get("requests", 0)
+        req_floor = 1_000_000 if full else 1
+        if not isinstance(req, (int, float)) or req < req_floor:
+            errors.append(
+                f"stream.requests = {req!r} < {req_floor} "
+                f"({payload.get('mode')} mode): the streamed replay no "
+                f"longer demonstrates the beyond-memory-ceiling run")
+    return errors
+
+
 def check(root: Path) -> list:
     errors = []
     benches = registry_benches(root)
@@ -141,6 +174,8 @@ def check(root: Path) -> list:
         for key in meta["required"]:
             if key not in payload:
                 errors.append(f"{rel}: missing required key {key!r}")
+        if stem == "engine_speed":
+            errors.extend(f"{rel}: {e}" for e in check_engine_speed(payload))
         for where, val in iter_budget_keys(payload):
             if val != 0:
                 errors.append(

@@ -162,6 +162,72 @@ def check_model_catalog(root: Path, registry) -> list:
     ]
 
 
+# how docs name serving-engine modules (module paths only -- a bare
+# ``engine_speed`` is a benchmark artifact stem, not an engine)
+ENGINE_MODULE_RES = (
+    re.compile(r"repro\.serving\.(engine_[a-z0-9_]+)"),
+    re.compile(r"serving/(engine_[a-z0-9_]+)\.py"),
+)
+
+
+def engine_mode_kwargs(root: Path):
+    """Keyword-only args of the engine constructors, parsed from source
+    (no jax import): the mode switches the docs must cover."""
+    import ast
+
+    names = {}
+    for mod, cls in (("engine_jax", "ClusterEngineJAX"),
+                     ("engine_stream", "StreamingEngineJAX")):
+        path = root / "src" / "repro" / "serving" / f"{mod}.py"
+        if not path.exists():
+            continue
+        tree = ast.parse(path.read_text())
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ClassDef) and node.name == cls:
+                for fn in node.body:
+                    if (isinstance(fn, ast.FunctionDef)
+                            and fn.name == "__init__"):
+                        for a in fn.args.kwonlyargs:
+                            names.setdefault(a.arg, f"{cls}.__init__")
+    return names
+
+
+def check_engine_catalog(root: Path) -> list:
+    """Both directions for the simulator guide: every engine module a
+    doc names must exist on disk, every ``engine_*`` module on disk must
+    be documented in docs/SIMULATORS.md, and every engine-constructor
+    mode switch (keyword-only arg) must be mentioned there too -- so the
+    guide's engine/mode tables cannot drift from the code."""
+    errors = []
+    disk = {p.stem
+            for p in (root / "src" / "repro" / "serving").glob("engine_*.py")}
+    sim = root / "docs" / "SIMULATORS.md"
+    sim_md = sim.read_text() if sim.exists() else ""
+    for rel in DOCS:
+        doc = root / rel
+        if not doc.exists():
+            continue
+        md = doc.read_text()
+        mentioned = {m.group(1) for rx in ENGINE_MODULE_RES
+                     for m in rx.finditer(md)}
+        for name in sorted(mentioned - disk):
+            errors.append(
+                f"{rel}: engine module {name!r} has no "
+                f"src/repro/serving/{name}.py on disk")
+    sim_mentioned = {m.group(1) for rx in ENGINE_MODULE_RES
+                     for m in rx.finditer(sim_md)}
+    for name in sorted(disk - sim_mentioned):
+        errors.append(
+            f"docs/SIMULATORS.md: engine module {name!r} "
+            f"(src/repro/serving/{name}.py) is not documented")
+    for kwarg, owner in sorted(engine_mode_kwargs(root).items()):
+        if not re.search(rf"`{kwarg}[`=]", sim_md):
+            errors.append(
+                f"docs/SIMULATORS.md: engine mode switch {kwarg!r} "
+                f"({owner}) is not documented")
+    return errors
+
+
 BENCH_RE = re.compile(r"\b(bench_\w+)\b")
 
 
@@ -273,6 +339,7 @@ def check(root: Path) -> list:
     errors.extend(check_model_catalog(root, models))
     errors.extend(check_evaluator_catalog(root, registry))
     errors.extend(check_benchmarks(root))
+    errors.extend(check_engine_catalog(root))
     return errors
 
 
