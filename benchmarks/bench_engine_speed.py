@@ -40,7 +40,7 @@ from repro.core.planning import solve_bundled_lp
 from repro.core.policies import gate_and_route
 from repro.core.types import WorkloadClass
 from repro.data.traces import TraceConfig, synth_azure_trace
-from repro.serving.engine_jax import ClusterEngineJAX
+from repro.serving.engine_jax import ClusterEngineJAX, run as engine_run
 from repro.serving.engine_sim import ClusterEngine, EngineConfig
 from repro.serving.engine_stream import StreamingEngineJAX
 from repro.workloads import get_scenario
@@ -102,7 +102,9 @@ def run(quick: bool = True) -> dict:
                                horizon=horizon, **kw)
 
         def leg(eng=eng):
-            leg.raw = eng.run_batch_raw(seeds)
+            # through the unified facade, exactly as the sweep evaluator
+            leg.raw = engine_run(eng.params, [eng._key(s) for s in seeds],
+                                 placement="vmap", **eng.statics)
             jax.block_until_ready(leg.raw)
 
         wall = timeit_median(leg, warmup=warmup, reps=reps)

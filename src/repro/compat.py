@@ -9,10 +9,13 @@ equivalent.
 
 from __future__ import annotations
 
+import inspect
+import warnings
+
 import jax
 
 __all__ = ["AxisType", "shard_map", "make_mesh", "pcast", "prng_key",
-           "enable_x64"]
+           "enable_x64", "SHARD_MAP_IMPL"]
 
 try:  # scoped double precision (the lp_jax solver runs inside this)
     from jax.experimental import enable_x64
@@ -34,9 +37,63 @@ except ImportError:  # older jax: every mesh axis is implicitly "auto"
     AxisType = None
 
 try:  # jax >= 0.8 public API
-    from jax import shard_map
-except ImportError:  # older jax: same callable under experimental
-    from jax.experimental.shard_map import shard_map
+    from jax import shard_map as _shard_map_impl
+    SHARD_MAP_IMPL = "jax.shard_map"
+except ImportError:
+    try:  # older jax: same callable under experimental
+        from jax.experimental.shard_map import shard_map as _shard_map_impl
+        SHARD_MAP_IMPL = "jax.experimental.shard_map"
+    except ImportError:  # ancient jax: single-device emulation only
+        _shard_map_impl = None
+        SHARD_MAP_IMPL = "fallback"
+
+# the replication-check kwarg was renamed check_rep -> check_vma; probe
+# once so callers can pass a version-neutral ``check=``
+_SHARD_CHECK_KW = None
+if _shard_map_impl is not None:
+    _params = inspect.signature(_shard_map_impl).parameters
+    _SHARD_CHECK_KW = ("check_vma" if "check_vma" in _params
+                       else "check_rep" if "check_rep" in _params else None)
+
+_shard_fallback_warned = False
+
+
+def _warn_shard_fallback() -> None:
+    """One-time, loud: a "sharded" run on this jax is actually serial."""
+    global _shard_fallback_warned
+    if not _shard_fallback_warned:
+        _shard_fallback_warned = True
+        warnings.warn(
+            f"this jax has no shard_map; emulating on a 1-device mesh "
+            f"({jax.device_count()} device(s) detected) -- the run computes "
+            f"the same values but is NOT partitioned across devices",
+            RuntimeWarning, stacklevel=3)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check=None):
+    """``shard_map`` with a *visible* single-device fallback.
+
+    On any jax that ships shard_map (public or experimental) this is a
+    pass-through (``check`` maps onto ``check_vma``/``check_rep``,
+    whichever this jax spells).  Without it, the only mesh we can honor
+    is a 1-device mesh -- there each "cells"-axis block IS the full
+    array, so calling ``f`` directly is exact -- and a one-time
+    ``RuntimeWarning`` with the detected device count makes the
+    serialization visible instead of silent; a multi-device mesh raises,
+    because silently computing wrong shapes is worse than failing.
+    """
+    if _shard_map_impl is not None:
+        kw = {}
+        if check is not None and _SHARD_CHECK_KW is not None:
+            kw[_SHARD_CHECK_KW] = check
+        return _shard_map_impl(f, mesh=mesh, in_specs=in_specs,
+                               out_specs=out_specs, **kw)
+    if mesh.devices.size != 1:
+        raise RuntimeError(
+            f"this jax has no shard_map and the fallback only emulates a "
+            f"1-device mesh, got {mesh.devices.size} devices")
+    _warn_shard_fallback()
+    return f
 
 
 if hasattr(jax.lax, "pcast"):

@@ -74,7 +74,7 @@ from __future__ import annotations
 
 import math
 from functools import partial
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -503,11 +503,36 @@ class UniformizedCTMC:
         """One replication; returns the raw scan carry (device arrays)."""
         return run_uniformized(self.params, self._key(seed), **self._static)
 
-    def run_batch_raw(self, seeds: Sequence) -> dict:
-        """All replications in one vmapped scan; leaves gain a leading
-        replication axis."""
+    def run_batch_raw(self, seeds: Sequence, *, placement: str = "vmap",
+                      shard: Optional[dict] = None) -> dict:
+        """All replications in one batch; leaves gain a leading
+        replication axis.
+
+        ``placement`` picks the execution layout (see
+        :mod:`repro.sweep.sharded`): ``"vmap"`` (default) is the
+        single-device oracle, ``"shard_map"`` partitions the key batch
+        over the devices' 1-D cells mesh (bitwise identical results),
+        ``"single"`` falls back to one jitted run per seed.  ``shard``
+        forwards tiling kwargs (``n_devices``,
+        ``max_cells_per_device``, ``bytes_per_cell``,
+        ``memory_budget``) to :func:`repro.sweep.sharded.run_sharded`.
+        """
+        if placement == "single":
+            outs = [self.run_raw(s) for s in seeds]
+            return {k: jnp.stack([o[k] for o in outs]) for k in outs[0]}
         keys = jnp.stack([self._key(s) for s in seeds])
-        return run_uniformized_batch(self.params, keys, **self._static)
+        if placement == "vmap":
+            return run_uniformized_batch(self.params, keys, **self._static)
+        if placement == "shard_map":
+            from repro.sweep.sharded import run_sharded
+
+            static = dict(self._static)
+            raw, self.shard_report = run_sharded(
+                lambda p, k: _run_core(p, k, **static),
+                self.params, keys, **(shard or {}))
+            return raw
+        raise ValueError(f"unknown placement {placement!r} (expected "
+                         f"single|vmap|shard_map)")
 
     # -- CTMCResult interface ----------------------------------------------
     def _to_result(self, o: dict) -> CTMCResult:
@@ -541,5 +566,7 @@ class UniformizedCTMC:
         return self._to_result({k: np.asarray(v)
                                 for k, v in self.run_raw(seed).items()})
 
-    def run_batch(self, seeds: Sequence) -> list:
-        return self.results_from_raw(self.run_batch_raw(seeds))
+    def run_batch(self, seeds: Sequence, *, placement: str = "vmap",
+                  shard: Optional[dict] = None) -> list:
+        return self.results_from_raw(
+            self.run_batch_raw(seeds, placement=placement, shard=shard))

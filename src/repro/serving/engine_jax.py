@@ -152,8 +152,8 @@ from repro.data.traces import TraceTensors, tensorize_trace
 
 from .engine_sim import EngineConfig
 
-__all__ = ["ClusterEngineJAX", "iteration_budget", "run_engine",
-           "run_engine_batch", "run_engine_multi"]
+__all__ = ["ClusterEngineJAX", "iteration_budget", "run",
+           "run_engine", "run_engine_batch", "run_engine_multi"]
 
 # request lifecycle (int32 codes carried through the scan)
 _NOT_ARRIVED, _QUEUED, _PREFILL, _BUF, _DECODE, _DONE, _ABANDONED = range(7)
@@ -996,6 +996,103 @@ def run_engine_multi(params, keys, **statics):
     return jax.vmap(lambda p, k: _run_core(p, k, **statics))(params, keys)
 
 
+# the streamed-replay segment loop has no fixed scan length (it stops at
+# the chunk frontier) and always early-exits, so n_steps/loop drop out
+_SEG_STATICS = tuple(s for s in _STATICS if s not in ("n_steps", "loop"))
+
+
+@partial(jax.jit, static_argnames=_SEG_STATICS)
+def _run_segment(params, key, carry, i0, budget, **statics):
+    """Run engine steps from ``carry`` until the chunk frontier, the
+    horizon or the step budget -- the streamed-replay segment loop
+    (:class:`repro.serving.engine_stream.StreamingEngineJAX` drives it
+    between working-set splices, via :func:`run`'s ``segment=`` mode)."""
+    step = _build_step(params, key, **statics)
+    Rw = params["t_arr"].shape[0]
+    dt = params["t_arr"].dtype
+    inf = jnp.inf
+
+    def cond(state):
+        c, i = state
+        ta = jnp.where(c["aptr"].astype(dt) < params["A"],
+                       params["t_arr"][jnp.clip(c["aptr"], 0, Rw - 1)], inf)
+        tmin = jnp.minimum(ta, c["t_next"].min())
+        return ((tmin <= params["h_eff"]) & (tmin < params["frontier"])
+                & (i < budget))
+
+    def body(state):
+        c, i = state
+        return step(c, i.astype(jnp.uint32)), i + 1
+
+    return jax.lax.while_loop(cond, body, (carry, i0))
+
+
+def _as_keys(keys):
+    """Normalize one-or-many seed specs (ints or PRNG keys) to arrays."""
+    if isinstance(keys, (list, tuple)):
+        return jnp.stack([prng_key(int(k))
+                          if isinstance(k, (int, np.integer)) else k
+                          for k in keys])
+    if isinstance(keys, (int, np.integer)):
+        return prng_key(int(keys))
+    return keys
+
+
+def run(params, keys, *, placement: str = "vmap", multi: bool = False,
+        segment=None, shard: Optional[dict] = None, **statics):
+    """Unified entry for every way this engine executes.
+
+    One facade over the jitted kernels, so callers (the sweep's
+    ``engine_jax`` evaluator, ``bench_engine_speed``, the streaming
+    engine) never reach into module internals:
+
+    * ``placement="single"``    one replication (``keys`` is one seed or
+      PRNG key);
+    * ``placement="vmap"``      a replication batch on one device
+      (``keys`` is a sequence/stack; the bitwise oracle);
+    * ``placement="shard_map"`` the same batch partitioned over the
+      devices' 1-D cells mesh (bitwise identical; ``shard`` forwards
+      tiling kwargs to :func:`repro.sweep.sharded.run_sharded`);
+    * ``multi=True``            vmap/shard the leading *instance* axis of
+      ``params`` together with ``keys`` (the ``run_engine_multi``
+      semantics: DistServe split scans, lockstep trace sets);
+    * ``segment=(carry, i0, budget)``  streamed-replay segment mode:
+      continue ``carry`` under the frontier-capped while loop instead of
+      a fresh replay (placement must be ``"single"``; ``statics`` then
+      exclude ``n_steps``/``loop``).
+
+    ``statics`` are the usual ``_STATICS`` kwargs
+    (:attr:`ClusterEngineJAX.statics`).
+    """
+    keys = _as_keys(keys)
+    if segment is not None:
+        if placement != "single" or multi:
+            raise ValueError("segment mode is single-placement only")
+        carry, i0, budget = segment
+        return _run_segment(params, keys, carry, i0, budget, **statics)
+    if placement == "single":
+        if multi:
+            raise ValueError("multi needs a batch placement (vmap|shard_map)")
+        return run_engine(params, keys, **statics)
+    if placement == "vmap":
+        return (run_engine_multi if multi
+                else run_engine_batch)(params, keys, **statics)
+    if placement == "shard_map":
+        from repro.sweep.sharded import run_sharded
+
+        st = dict(statics)
+        if multi:
+            raw, _ = run_sharded(
+                lambda _rep, pk: _run_core(pk[0], pk[1], **st),
+                None, (params, keys), **(shard or {}))
+        else:
+            raw, _ = run_sharded(lambda p, k: _run_core(p, k, **st),
+                                 params, keys, **(shard or {}))
+        return raw
+    raise ValueError(f"unknown placement {placement!r} (expected "
+                     f"single|vmap|shard_map)")
+
+
 class ClusterEngineJAX:
     """Batched trace-replay twin of :class:`ClusterEngine`.
 
@@ -1168,15 +1265,23 @@ class ClusterEngineJAX:
             return prng_key(int(seed))
         return seed
 
+    @property
+    def statics(self) -> dict:
+        """The compile-time kwargs of this instance's kernel -- pass them
+        to the module-level :func:`run` facade next to :attr:`params`."""
+        return dict(self._static)
+
     def run_raw(self, seed) -> dict:
         """One replication; returns the raw scan carry (device arrays)."""
-        return run_engine(self.params, self._key(seed), **self._static)
+        return run(self.params, self._key(seed), placement="single",
+                   **self._static)
 
-    def run_batch_raw(self, seeds: Sequence) -> dict:
-        """All replications in one vmapped scan; leaves gain a leading
-        replication axis."""
-        keys = jnp.stack([self._key(s) for s in seeds])
-        return run_engine_batch(self.params, keys, **self._static)
+    def run_batch_raw(self, seeds: Sequence, *, placement: str = "vmap",
+                      shard: Optional[dict] = None) -> dict:
+        """All replications in one batch; leaves gain a leading
+        replication axis.  ``placement``/``shard`` as in :func:`run`."""
+        return run(self.params, [self._key(s) for s in seeds],
+                   placement=placement, shard=shard, **self._static)
 
     # -- EngineMetrics.summary() interface ---------------------------------
     def _summary(self, o: dict) -> dict:
@@ -1239,5 +1344,7 @@ class ClusterEngineJAX:
         return self._summary({k: np.asarray(v)
                               for k, v in self.run_raw(seed).items()})
 
-    def run_batch(self, seeds: Sequence) -> list:
-        return self.summaries_from_raw(self.run_batch_raw(seeds))
+    def run_batch(self, seeds: Sequence, *, placement: str = "vmap",
+                  shard: Optional[dict] = None) -> list:
+        return self.summaries_from_raw(
+            self.run_batch_raw(seeds, placement=placement, shard=shard))

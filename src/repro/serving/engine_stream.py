@@ -46,7 +46,6 @@ Horizon semantics are *drain*: the replay runs to ``horizon``
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional, Sequence
 
 import jax
@@ -59,9 +58,9 @@ from repro.core.types import WorkloadClass
 from repro.data.traces import (TraceTensors, TraceValidationError,
                                chunk_trace, tensorize_trace)
 
-from .engine_jax import (ClusterEngineJAX, _build_step, _init_carry,
+from .engine_jax import (ClusterEngineJAX, _init_carry,
                          _DECODE, _DONE, _NOT_ARRIVED, _QUEUED,
-                         iteration_budget)
+                         iteration_budget, run as run_engine_facade)
 from .engine_sim import EngineConfig
 
 __all__ = ["StreamingEngineJAX", "TraceChunkSource"]
@@ -203,32 +202,15 @@ def _compact_splice(carry, tbl, ch, h_eff):
     return c, tbl, seg
 
 
-_SEG_STATICS = ("n", "B", "gate_kind", "router_kind", "charging",
-                "partition", "sarathi", "unchunked", "prefill_only",
-                "has_pw", "expiry", "model_kind", "k_events", "fastforward")
-
-
-@partial(jax.jit, static_argnames=_SEG_STATICS)
 def _run_segment(params, key, carry, i0, budget, **statics):
-    """Run engine steps until the frontier, the horizon or the budget."""
-    step = _build_step(params, key, **statics)
-    Rw = params["t_arr"].shape[0]
-    dt = params["t_arr"].dtype
-    inf = jnp.inf
+    """Run engine steps until the frontier, the horizon or the budget.
 
-    def cond(state):
-        c, i = state
-        ta = jnp.where(c["aptr"].astype(dt) < params["A"],
-                       params["t_arr"][jnp.clip(c["aptr"], 0, Rw - 1)], inf)
-        tmin = jnp.minimum(ta, c["t_next"].min())
-        return ((tmin <= params["h_eff"]) & (tmin < params["frontier"])
-                & (i < budget))
-
-    def body(state):
-        c, i = state
-        return step(c, i.astype(jnp.uint32)), i + 1
-
-    return jax.lax.while_loop(cond, body, (carry, i0))
+    Thin alias over the :func:`repro.serving.engine_jax.run` facade's
+    ``segment=`` mode -- the frontier-capped while loop itself lives
+    next to the step kernel in engine_jax.
+    """
+    return run_engine_facade(params, key, placement="single",
+                             segment=(carry, i0, budget), **statics)
 
 
 class StreamingEngineJAX:

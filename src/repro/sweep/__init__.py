@@ -5,25 +5,34 @@ call -- the execution backbone of every benchmark in ``benchmarks/`` and
 the paper's convergence (EC.8.5) and scaling (EC.8.3) experiments.
 
 * :mod:`repro.sweep.spec` -- ``SweepSpec`` / ``SweepResult`` JSON schema,
-  per-cell ``SeedSequence`` streams.
-* :mod:`repro.sweep.evaluators` -- policy-token registry + the ctmc /
-  ctmc_jax / lp / engine cell evaluators.
+  per-cell ``SeedSequence`` streams, the :class:`Evaluator` protocol +
+  registry (``get_evaluator`` / ``register_evaluator``).
+* :mod:`repro.sweep.evaluators` -- policy-token registry + the registered
+  ctmc / ctmc_jax / fluid / lp / lp_jax / engine / engine_jax evaluators.
 * :mod:`repro.sweep.fluid_batch` -- ``jax.vmap``-batched fluid-ODE grid.
+* :mod:`repro.sweep.sharded` -- SPMD (``shard_map``) grid partitioning
+  over the device mesh; :data:`PLACEMENTS` catalog.
 * :mod:`repro.sweep.runner` -- :func:`run_sweep` grid executor.
 * :mod:`repro.sweep.run` -- ``python -m repro.sweep.run`` CLI.
 """
 
-from .spec import (CellResult, MixSpec, SweepResult, SweepSchemaError,
-                   SweepSpec, cell_seed_sequence, validate_payload)
+from .spec import (CellResult, Evaluator, MixSpec, SweepResult,
+                   SweepSchemaError, SweepSpec, cell_seed_sequence,
+                   get_evaluator, register_evaluator, validate_payload)
 from .runner import run_sweep
+from .sharded import PLACEMENTS
 
 __all__ = [
     "CellResult",
+    "Evaluator",
     "MixSpec",
+    "PLACEMENTS",
     "SweepResult",
     "SweepSchemaError",
     "SweepSpec",
     "cell_seed_sequence",
+    "get_evaluator",
+    "register_evaluator",
     "validate_payload",
     "run_sweep",
 ]

@@ -14,10 +14,18 @@ Tokens are resolved against a per-mix :class:`MixContext`, which caches the
 planning-LP solves and (for the trace engine) the synthesized trace per
 cluster size, so the embarrassingly-parallel seed axis never repeats
 deterministic work.
+
+Every evaluator here registers against the unified
+:class:`~repro.sweep.spec.Evaluator` protocol (one call signature,
+``(ctx, token, n, *, seeds, **extra) -> metric dicts``) under its
+:data:`~repro.sweep.spec.EVALUATORS` name -- ``get_evaluator(name)`` is
+the one dispatch path the runner and the sharded placements use.  The
+historical ``evaluate_*`` entry points remain as thin deprecation shims.
 """
 
 from __future__ import annotations
 
+import warnings
 from typing import Optional, Sequence
 
 import numpy as np
@@ -30,7 +38,7 @@ from repro.core.policies import (PolicySpec, ablation_policy,
 from repro.core.simulator import CTMCSimulator
 from repro.core.types import Pricing, ServicePrimitives, WorkloadClass
 
-from .spec import MixSpec, SweepSpec, cell_int_seed
+from .spec import MixSpec, SweepSpec, cell_int_seed, register_evaluator
 
 __all__ = [
     "ABLATION_TOKENS",
@@ -46,6 +54,14 @@ __all__ = [
     "evaluate_engine_jax_cells",
     "prewarm_plans",
 ]
+
+
+def _warn_deprecated(old: str, name: str) -> None:
+    warnings.warn(
+        f"{old} is deprecated; use "
+        f"repro.sweep.spec.get_evaluator({name!r}) -- the unified "
+        f"Evaluator protocol (ctx, token, n, *, seeds, **extra)",
+        DeprecationWarning, stacklevel=3)
 
 # lp-family policy token -> MixContext.plan kind (shared by the serial
 # "lp" evaluator and the batched "lp_jax" one)
@@ -87,6 +103,9 @@ class MixContext:
         self._plans: dict = {}
         self._traces: dict = {}
         self._trace_classes: dict = {}
+        # whole-grid Evaluator.prepare hooks park per-token metrics here
+        # (keys like ("fluid", token) / ("lp_jax", token))
+        self.cache: dict = {}
 
     # -- planning --------------------------------------------------------------
     def plan(self, kind: str = "base"):
@@ -243,8 +262,9 @@ def _ctmc_metrics(res, plan) -> dict:
     return m
 
 
-def evaluate_ctmc_cells(ctx: MixContext, token: str, n: int,
-                        streams: Sequence[np.random.SeedSequence]) -> list:
+@register_evaluator("ctmc")
+def _eval_ctmc(ctx: MixContext, token: str, n: int, *,
+               seeds: Sequence[np.random.SeedSequence]) -> list:
     """All seed replications of one (mix, policy, n) cell.
 
     One simulator instance serves the whole replication batch
@@ -255,12 +275,19 @@ def evaluate_ctmc_cells(ctx: MixContext, token: str, n: int,
     policy = resolve_policy(token, ctx, n)
     spec = ctx.spec
     sim = CTMCSimulator(ctx.classes, ctx.prim, ctx.pricing, policy, n=n,
-                        seed=streams[0], record_every=spec.record_every)
-    results = sim.run_batch(spec.horizon, warmup=spec.warmup, rngs=streams)
+                        seed=seeds[0], record_every=spec.record_every)
+    results = sim.run_batch(spec.horizon, warmup=spec.warmup, rngs=seeds)
     # judge each policy against its own planning targets (the SLI-aware
     # router plans with q_d pinned to zero, so its x*/y*/R* differ)
     plan = policy.plan if policy.plan is not None else ctx.plan("base")
     return [_ctmc_metrics(r, plan) for r in results]
+
+
+def evaluate_ctmc_cells(ctx: MixContext, token: str, n: int,
+                        streams: Sequence[np.random.SeedSequence]) -> list:
+    """Deprecated: use ``get_evaluator("ctmc")``."""
+    _warn_deprecated("evaluate_ctmc_cells", "ctmc")
+    return _eval_ctmc(ctx, token, n, seeds=streams)
 
 
 # ---------------------------------------------------------------------------
@@ -268,31 +295,60 @@ def evaluate_ctmc_cells(ctx: MixContext, token: str, n: int,
 # ---------------------------------------------------------------------------
 
 
-def evaluate_ctmc_jax_cells(ctx: MixContext, token: str, n: int,
-                            streams: Sequence[np.random.SeedSequence]) -> list:
+@register_evaluator("ctmc_jax")
+def _eval_ctmc_jax(ctx: MixContext, token: str, n: int, *,
+                   seeds: Sequence[np.random.SeedSequence],
+                   placement: Optional[str] = None,
+                   shard: Optional[dict] = None) -> list:
     """All seed replications of one (mix, policy, n) cell, as ONE
-    ``jax.vmap`` batch of the uniformized CTMC engine
+    batched run of the uniformized CTMC engine
     (:class:`repro.core.ctmc_jax.UniformizedCTMC`).
 
     Emits the same metric keys as the Python ``ctmc`` evaluator plus
     three engine diagnostics: ``t_end`` (must equal the horizon --
     smaller means the fixed step budget ran out), ``clip_steps``
     (ticks-mode abandonment-cap clip count; 0 in the default events
-    mode) and ``n_events`` (real transitions simulated).  ``stepping``
-    and ``n_steps`` can be overridden via ``spec.extra["ctmc_jax"]``.
+    mode) and ``n_events`` (real transitions simulated).  ``stepping``,
+    ``n_steps`` and ``x64`` can be overridden via
+    ``spec.extra["ctmc_jax"]``.
+
+    ``x64=True`` runs the whole cell in double precision
+    (:func:`repro.compat.enable_x64` scoped around construction and the
+    scan).  Required at production cluster sizes: once the mean
+    inter-event time ``1/(3 n lam)`` drops below the ULP of the float32
+    clock (``eps(t) ~ t * 2**-23``), the clock stalls mid-horizon while
+    events and revenue keep accruing -- ``t_end < horizon`` and the
+    float32 event counter saturating at ``2**24`` are the symptoms.
+
+    ``placement`` picks the batch execution strategy (one of
+    :data:`repro.sweep.sharded.PLACEMENTS`; default
+    ``spec.extra["placement"]`` or ``"vmap"``) and ``shard`` passes
+    tiling overrides to :func:`repro.sweep.sharded.run_sharded`; metric
+    values are bitwise identical across placements.
     """
+    import contextlib
+
+    from repro.compat import enable_x64
     from repro.core.ctmc_jax import UniformizedCTMC
 
     spec = ctx.spec
+    if placement is None:
+        placement = spec.extra.get("placement", "vmap")
+    if shard is None:
+        shard = spec.extra.get("shard")
     if spec.record_every > 0:
         raise ValueError("the ctmc_jax evaluator does not record "
                          "trajectories; use evaluator='ctmc'")
     kw = dict(spec.extra.get("ctmc_jax", {}))
+    x64 = bool(kw.pop("x64", False))
     policy = resolve_policy(token, ctx, n)
-    sim = UniformizedCTMC(ctx.classes, ctx.prim, ctx.pricing, policy, n=n,
-                          horizon=spec.horizon, warmup=spec.warmup, **kw)
-    raw = sim.run_batch_raw([cell_int_seed(ss) for ss in streams])
-    results = sim.results_from_raw(raw)
+    with enable_x64() if x64 else contextlib.nullcontext():
+        sim = UniformizedCTMC(ctx.classes, ctx.prim, ctx.pricing, policy,
+                              n=n, horizon=spec.horizon, warmup=spec.warmup,
+                              **kw)
+        raw = sim.run_batch_raw([cell_int_seed(ss) for ss in seeds],
+                                placement=placement, shard=shard)
+        results = sim.results_from_raw(raw)
     clip = np.asarray(raw["clip_steps"])
     plan = policy.plan if policy.plan is not None else ctx.plan("base")
     out = []
@@ -305,18 +361,36 @@ def evaluate_ctmc_jax_cells(ctx: MixContext, token: str, n: int,
     return out
 
 
+def evaluate_ctmc_jax_cells(ctx: MixContext, token: str, n: int,
+                            streams: Sequence[np.random.SeedSequence]) -> list:
+    """Deprecated: use ``get_evaluator("ctmc_jax")``."""
+    _warn_deprecated("evaluate_ctmc_jax_cells", "ctmc_jax")
+    return _eval_ctmc_jax(ctx, token, n, seeds=streams)
+
+
 # ---------------------------------------------------------------------------
 # Planning-LP evaluator (deterministic; Figs. 7-8 style sweeps)
 # ---------------------------------------------------------------------------
 
 
-def evaluate_lp_cell(ctx: MixContext, token: str) -> dict:
-    """Optimal-plan metrics for one mix (policy axis picks the objective)."""
+@register_evaluator("lp", deterministic=True)
+def _eval_lp(ctx: MixContext, token: str, n: int, *, seeds=()) -> dict:
+    """Optimal-plan metrics for one mix (policy axis picks the objective).
+
+    Deterministic: returns ONE metrics dict; the :class:`Evaluator`
+    protocol replicates it over the degenerate seed axis.
+    """
     name, _ = parse_policy_token(token)
     kind = LP_TOKEN_KINDS.get(name)
     if kind is None:
         raise ValueError(f"lp evaluator got non-lp policy token {token!r}")
     return _lp_metrics(ctx.plan(kind))
+
+
+def evaluate_lp_cell(ctx: MixContext, token: str) -> dict:
+    """Deprecated: use ``get_evaluator("lp")``."""
+    _warn_deprecated("evaluate_lp_cell", "lp")
+    return _eval_lp(ctx, token, 0)
 
 
 def _lp_metrics(plan) -> dict:
@@ -340,9 +414,9 @@ def _lp_metrics(plan) -> dict:
 # ---------------------------------------------------------------------------
 
 
-def evaluate_lp_jax_grid(contexts: Sequence[MixContext],
-                         policies: Sequence[str],
-                         extra: Optional[dict] = None) -> dict:
+def _lp_jax_grid(contexts: Sequence[MixContext],
+                 policies: Sequence[str],
+                 extra: Optional[dict] = None) -> dict:
     """Metrics for every (mix, lp-policy) pair via
     :func:`repro.core.planning_batch.solve_plan_batch` -- one vmapped
     interior-point run per plan kind instead of a Python loop of simplex
@@ -387,6 +461,69 @@ def evaluate_lp_jax_grid(contexts: Sequence[MixContext],
             m["lp_iters"] = float(pb.n_iter[b])
             out[(mi, pi)] = m
     return out
+
+
+def _lp_jax_prepare(contexts: Sequence[MixContext],
+                    policies: Sequence[str],
+                    extra: Optional[dict] = None) -> None:
+    """Whole-grid hook: one batched interior-point run per plan kind,
+    metrics parked in each ``ctx.cache[("lp_jax", token)]``."""
+    grid = _lp_jax_grid(contexts, policies, extra)
+    for (mi, pi), m in grid.items():
+        contexts[mi].cache[("lp_jax", policies[pi])] = m
+
+
+@register_evaluator("lp_jax", deterministic=True, prepare=_lp_jax_prepare)
+def _eval_lp_jax(ctx: MixContext, token: str, n: int, *, seeds=()) -> dict:
+    """Batched-planner metrics for one cell, served from the
+    ``prepare`` cache (the runner batch-solves the whole (mix x policy)
+    plane up front); a cache miss falls back to a solo batch of one."""
+    key = ("lp_jax", token)
+    if key not in ctx.cache:
+        _lp_jax_prepare([ctx], [token], ctx.spec.extra)
+    return ctx.cache[key]
+
+
+def evaluate_lp_jax_grid(contexts: Sequence[MixContext],
+                         policies: Sequence[str],
+                         extra: Optional[dict] = None) -> dict:
+    """Deprecated: use ``get_evaluator("lp_jax")`` (grid shape via its
+    ``prepare`` hook)."""
+    _warn_deprecated("evaluate_lp_jax_grid", "lp_jax")
+    return _lp_jax_grid(contexts, policies, extra)
+
+
+# ---------------------------------------------------------------------------
+# Fluid-limit evaluator (deterministic; one vmapped integration per grid)
+# ---------------------------------------------------------------------------
+
+
+def _fluid_prepare(contexts: Sequence[MixContext],
+                   policies: Sequence[str],
+                   extra: Optional[dict] = None) -> None:
+    """Whole-grid hook: integrate the full (mix x policy) plane as ONE
+    vmapped scan per router family
+    (:func:`repro.sweep.fluid_batch.evaluate_fluid_grid`), metrics parked
+    in each ``ctx.cache[("fluid", token)]``."""
+    from .fluid_batch import evaluate_fluid_grid
+
+    dt = float((extra or {}).get("dt", 2e-3))
+    grid = evaluate_fluid_grid(contexts, policies,
+                               contexts[0].spec.horizon, dt)
+    for (mi, pi), m in grid.items():
+        contexts[mi].cache[("fluid", policies[pi])] = m
+
+
+@register_evaluator("fluid", deterministic=True, prepare=_fluid_prepare)
+def _eval_fluid(ctx: MixContext, token: str, n: int, *, seeds=()) -> dict:
+    """Fluid-limit metrics for one cell, served from the ``prepare``
+    cache; a cache miss falls back to a solo integration.  The fluid
+    limit has no cluster-size or seed dependence, so one dict covers the
+    degenerate (n, seed) axes."""
+    key = ("fluid", token)
+    if key not in ctx.cache:
+        _fluid_prepare([ctx], [token], ctx.spec.extra)
+    return ctx.cache[key]
 
 
 def prewarm_plans(contexts: Sequence[MixContext],
@@ -502,8 +639,8 @@ def evaluate_trace_policy(token: str, trace, n: int, *,
     return {k: float(v) for k, v in out.items()}
 
 
-def evaluate_engine_cell(ctx: MixContext, token: str, n: int,
-                         ss: np.random.SeedSequence) -> dict:
+def _engine_cell(ctx: MixContext, token: str, n: int,
+                 ss: np.random.SeedSequence) -> dict:
     spec = ctx.spec
     return evaluate_trace_policy(
         token, ctx.trace(n), n,
@@ -517,11 +654,29 @@ def evaluate_engine_cell(ctx: MixContext, token: str, n: int,
     )
 
 
-def evaluate_engine_jax_cells(ctx: MixContext, token: str, n: int,
-                              streams: Sequence[np.random.SeedSequence]
-                              ) -> list:
+@register_evaluator("engine")
+def _eval_engine(ctx: MixContext, token: str, n: int, *,
+                 seeds: Sequence[np.random.SeedSequence]) -> list:
+    """Per-seed replications of the Python trace engine (serial loop of
+    :func:`evaluate_trace_policy`; trace / planner-classes / plan cached
+    per n on the context)."""
+    return [_engine_cell(ctx, token, n, ss) for ss in seeds]
+
+
+def evaluate_engine_cell(ctx: MixContext, token: str, n: int,
+                         ss: np.random.SeedSequence) -> dict:
+    """Deprecated: use ``get_evaluator("engine")``."""
+    _warn_deprecated("evaluate_engine_cell", "engine")
+    return _engine_cell(ctx, token, n, ss)
+
+
+@register_evaluator("engine_jax")
+def _eval_engine_jax(ctx: MixContext, token: str, n: int, *,
+                     seeds: Sequence[np.random.SeedSequence],
+                     placement: Optional[str] = None,
+                     shard: Optional[dict] = None) -> list:
     """All seed replications of one (mix, policy, n) cell, as ONE
-    ``jax.vmap`` batch of the iteration-level trace-replay engine
+    batched run of the iteration-level trace-replay engine
     (:class:`repro.serving.engine_jax.ClusterEngineJAX`).
 
     Same policy tokens and summary-metric keys as the Python ``engine``
@@ -536,10 +691,19 @@ def evaluate_engine_jax_cells(ctx: MixContext, token: str, n: int,
     switches ``fastforward`` and ``k_events`` -- see the engine module
     docstring for when each applies) come from
     ``spec.extra["engine_jax"]``.
+
+    ``placement`` / ``shard`` select the batch execution strategy
+    exactly as for the ``ctmc_jax`` evaluator (defaults from
+    ``spec.extra``); metric values are bitwise identical across
+    placements.
     """
     from repro.serving.engine_jax import ClusterEngineJAX
 
     spec = ctx.spec
+    if placement is None:
+        placement = spec.extra.get("placement", "vmap")
+    if shard is None:
+        shard = spec.extra.get("shard")
     if spec.record_every > 0:
         raise ValueError("the engine_jax evaluator does not record "
                          "queue traces; use evaluator='engine'")
@@ -548,9 +712,18 @@ def evaluate_engine_jax_cells(ctx: MixContext, token: str, n: int,
                                         ctx.pricing, n)
     eng = ClusterEngineJAX(ctx.trace_classes(n), policy, cfg, ctx.trace(n),
                            horizon=spec.horizon, **kw)
-    out = eng.run_batch([cell_int_seed(ss) for ss in streams])
+    out = eng.run_batch([cell_int_seed(ss) for ss in seeds],
+                        placement=placement, shard=shard)
     name, args = parse_policy_token(token)
     if name.startswith("distserve_"):
         for m in out:
             m["distserve_k"] = _distserve_k(args, n)
     return [{k: float(v) for k, v in m.items()} for m in out]
+
+
+def evaluate_engine_jax_cells(ctx: MixContext, token: str, n: int,
+                              streams: Sequence[np.random.SeedSequence]
+                              ) -> list:
+    """Deprecated: use ``get_evaluator("engine_jax")``."""
+    _warn_deprecated("evaluate_engine_jax_cells", "engine_jax")
+    return _eval_engine_jax(ctx, token, n, seeds=streams)

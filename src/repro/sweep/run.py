@@ -21,7 +21,8 @@ from pathlib import Path
 import numpy as np
 
 from .runner import run_sweep
-from .spec import MixSpec, SweepResult, SweepSpec
+from .sharded import PLACEMENTS
+from .spec import EVALUATORS, MixSpec, SweepResult, SweepSpec
 
 __all__ = ["main", "default_mix", "fmt_table"]
 
@@ -103,10 +104,13 @@ def build_spec(args) -> SweepSpec:
                     overrides,
                     horizon=min(horizon, get_scenario(name).horizon)))
             for name in names)
+    extra = {}
+    if args.placement:
+        extra["placement"] = args.placement
     return SweepSpec(
         name=args.name or "sweep", evaluator=args.evaluator,
         policies=policies, n_servers=ns, n_seeds=n_seeds, seed=args.seed,
-        mixes=mixes, horizon=horizon, warmup=warmup)
+        mixes=mixes, horizon=horizon, warmup=warmup, extra=extra)
 
 
 def summarize(result: SweepResult) -> str:
@@ -152,9 +156,11 @@ def main(argv=None) -> int:
                     help="seed replications per cell")
     ap.add_argument("--seed", type=int, default=0,
                     help="master entropy for the per-cell streams")
-    ap.add_argument("--evaluator", default="ctmc",
-                    choices=("ctmc", "ctmc_jax", "fluid", "lp", "lp_jax",
-                             "engine", "engine_jax"))
+    ap.add_argument("--evaluator", default="ctmc", choices=EVALUATORS)
+    ap.add_argument("--placement", default=None, choices=PLACEMENTS,
+                    help="batch execution strategy for the JAX evaluators "
+                         "(shard_map partitions the seed axis over the "
+                         "device mesh; default vmap)")
     ap.add_argument("--mix", default=None, choices=sorted(MIX_PRESETS),
                     help="workload-mix preset (default two_class; "
                          "mutually exclusive with --scenarios)")

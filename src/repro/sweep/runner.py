@@ -3,8 +3,17 @@
 Replaces the ad-hoc serial loops the benchmark scripts used to carry:
 one call evaluates the full (mix x policy x n x seed) cross product with
 per-cell :class:`numpy.random.SeedSequence` streams (bitwise reproducible,
-iteration-order independent) and, for the deterministic fluid evaluator,
-a single ``jax.vmap``-batched integration over the whole grid.
+iteration-order independent).  Dispatch is uniform: every evaluator sits
+behind the :class:`~repro.sweep.spec.Evaluator` protocol
+(``get_evaluator(spec.evaluator)``), deterministic ones replicate a
+single solve over the degenerate seed axis, and grid-batched ones
+(fluid ODE, batched planning LP) run their whole (mix x policy) plane in
+ONE vmapped solve via their ``prepare`` hook before the cell loop.
+
+``spec.extra["placement"]`` selects the batch execution strategy for the
+JAX engines (one of :data:`repro.sweep.sharded.PLACEMENTS`); with
+``"shard_map"`` the seed axis is SPMD-partitioned over the device mesh
+and the result meta records the detected device count.
 """
 
 from __future__ import annotations
@@ -12,11 +21,8 @@ from __future__ import annotations
 import time
 from typing import Callable, Optional
 
-from .evaluators import (MixContext, evaluate_ctmc_cells,
-                         evaluate_ctmc_jax_cells, evaluate_engine_cell,
-                         evaluate_engine_jax_cells, evaluate_lp_cell,
-                         evaluate_lp_jax_grid, prewarm_plans)
-from .spec import CellResult, SweepResult, SweepSpec, cell_seed_sequence
+from .evaluators import MixContext, prewarm_plans
+from .spec import SweepResult, SweepSpec, cell_seed_sequence, get_evaluator
 
 __all__ = ["run_sweep"]
 
@@ -26,76 +32,54 @@ def run_sweep(spec: SweepSpec,
     """Evaluate every cell of ``spec``'s grid and collect the results."""
     t0 = time.time()
     say = progress or (lambda _msg: None)
+    placement = spec.extra.get("placement")
+    if placement is not None:
+        from .sharded import PLACEMENTS
+
+        if placement not in PLACEMENTS:
+            raise ValueError(
+                f"extra['placement'] must be one of {PLACEMENTS}, "
+                f"got {placement!r}")
     contexts = [MixContext(mix, spec) for mix in spec.mixes]
+    ev = get_evaluator(spec.evaluator)
     cells: list = []
 
-    if spec.evaluator in ("fluid", "lp_jax"):
-        # grid-batched deterministic evaluators: one vmapped solve for the
-        # whole (mix x policy) plane, replicated over the (n, seed) axes
-        if spec.evaluator == "fluid":
-            from .fluid_batch import evaluate_fluid_grid
+    if ev.prepare is not None:
+        # grid-batched evaluators: one vmapped solve for the whole
+        # (mix x policy) plane, parked on the contexts' caches
+        say(f"[{spec.name}] {ev.name}: batch-preparing "
+            f"{len(contexts) * len(spec.policies)} instances")
+        ev.prepare(contexts, spec.policies, spec.extra)
+    elif spec.extra.get("batch_plans"):
+        # one vmapped interior-point run replaces the per-mix serial
+        # simplex solves the cell evaluators would otherwise trigger
+        solved = prewarm_plans(contexts, spec.policies)
+        say(f"[{spec.name}] prewarmed {solved} planning LPs (batch_plans)")
 
-            dt = float(spec.extra.get("dt", 2e-3))
-            say(f"[{spec.name}] fluid: vmap-integrating "
-                f"{len(contexts) * len(spec.policies)} instances")
-            grid = evaluate_fluid_grid(contexts, spec.policies,
-                                       spec.horizon, dt)
-        else:
-            say(f"[{spec.name}] lp_jax: batch-solving "
-                f"{len(contexts) * len(spec.policies)} planning LPs")
-            grid = evaluate_lp_jax_grid(contexts, spec.policies, spec.extra)
-        for mi, ctx in enumerate(contexts):
-            for pi, token in enumerate(spec.policies):
-                metrics = grid[(mi, pi)]
-                for n in spec.n_servers:
-                    for si in range(spec.n_seeds):
-                        cells.append(CellResult(ctx.mix.name, token, n, si,
-                                                dict(metrics)))
-    else:
-        if spec.extra.get("batch_plans"):
-            # one vmapped interior-point run replaces the per-mix serial
-            # simplex solves the cell evaluators would otherwise trigger
-            solved = prewarm_plans(contexts, spec.policies)
-            say(f"[{spec.name}] prewarmed {solved} planning LPs "
-                f"(batch_plans)")
-        # extra["crn_policies"]: common random numbers across the policy
-        # axis -- every policy sees the same per-(mix, n, seed) streams,
-        # turning policy comparisons into paired comparisons (the EC.8.6
-        # ablation protocol; variance reduction for rankings).
-        crn = bool(spec.extra.get("crn_policies", False))
-        for mi, ctx in enumerate(contexts):
-            for pi, token in enumerate(spec.policies):
-                for ni, n in enumerate(spec.n_servers):
-                    streams = [cell_seed_sequence(spec, mi,
-                                                  0 if crn else pi, ni, si)
-                               for si in range(spec.n_seeds)]
-                    say(f"[{spec.name}] {ctx.mix.name} / {token} / n={n} "
-                        f"({spec.n_seeds} seeds)")
-                    if spec.evaluator == "ctmc":
-                        metrics_list = evaluate_ctmc_cells(
-                            ctx, token, n, streams)
-                    elif spec.evaluator == "ctmc_jax":
-                        metrics_list = evaluate_ctmc_jax_cells(
-                            ctx, token, n, streams)
-                    elif spec.evaluator == "engine":
-                        metrics_list = [
-                            evaluate_engine_cell(ctx, token, n, ss)
-                            for ss in streams]
-                    elif spec.evaluator == "engine_jax":
-                        metrics_list = evaluate_engine_jax_cells(
-                            ctx, token, n, streams)
-                    elif spec.evaluator == "lp":
-                        # deterministic: one solve, replicated over seeds
-                        m = evaluate_lp_cell(ctx, token)
-                        metrics_list = [dict(m) for _ in streams]
-                    else:  # pragma: no cover - SweepSpec already validates
-                        raise ValueError(spec.evaluator)
-                    for si, m in enumerate(metrics_list):
-                        cells.append(CellResult(ctx.mix.name, token, n, si, m))
+    # extra["crn_policies"]: common random numbers across the policy
+    # axis -- every policy sees the same per-(mix, n, seed) streams,
+    # turning policy comparisons into paired comparisons (the EC.8.6
+    # ablation protocol; variance reduction for rankings).
+    crn = bool(spec.extra.get("crn_policies", False))
+    for mi, ctx in enumerate(contexts):
+        for pi, token in enumerate(spec.policies):
+            for ni, n in enumerate(spec.n_servers):
+                streams = [cell_seed_sequence(spec, mi, 0 if crn else pi,
+                                              ni, si)
+                           for si in range(spec.n_seeds)]
+                say(f"[{spec.name}] {ctx.mix.name} / {token} / n={n} "
+                    f"({spec.n_seeds} seeds)")
+                cells.extend(ev(ctx, token, n, seeds=streams))
 
     meta = {
         "evaluator": spec.evaluator,
         "n_cells": len(cells),
         "wall_seconds": round(time.time() - t0, 3),
     }
+    if placement is not None:
+        from .sharded import detected_devices
+
+        meta["placement"] = placement
+        if placement == "shard_map":
+            meta["shard_devices"] = detected_devices()
     return SweepResult(spec=spec, cells=cells, meta=meta)

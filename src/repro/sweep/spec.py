@@ -21,7 +21,7 @@ import json
 import math
 from dataclasses import dataclass, field
 from pathlib import Path
-from typing import Optional, Sequence
+from typing import Callable, Dict, Optional, Sequence
 
 import numpy as np
 
@@ -30,6 +30,9 @@ from repro.core.types import Pricing, ServicePrimitives, WorkloadClass
 __all__ = [
     "SCHEMA_VERSION",
     "EVALUATORS",
+    "Evaluator",
+    "register_evaluator",
+    "get_evaluator",
     "MixSpec",
     "SweepSpec",
     "CellResult",
@@ -179,6 +182,86 @@ def cell_seed_sequence(spec: SweepSpec, mix_i: int, policy_i: int,
 def cell_int_seed(ss: np.random.SeedSequence) -> int:
     """Collapse a cell stream to an int for engines that take int seeds."""
     return int(ss.generate_state(1, np.uint32)[0])
+
+
+# ---------------------------------------------------------------------------
+# Evaluator protocol: one call signature for every engine
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Evaluator:
+    """One registered sweep evaluator behind the uniform protocol.
+
+    Calling it evaluates one (mix, policy, n) cell group::
+
+        evaluator(ctx, token, n, seeds=streams, **extra)
+            -> list[CellResult]   # one per seed replication
+
+    ``ctx`` is the :class:`~repro.sweep.evaluators.MixContext`, ``token``
+    a policy token, ``n`` the cluster size, ``seeds`` the cell's
+    :class:`numpy.random.SeedSequence` streams (one per replication) and
+    ``extra`` evaluator-specific overrides (e.g. ``placement=`` for the
+    JAX engines) that default from ``ctx.spec.extra``.
+
+    ``fn`` implements the cell group and returns metric dicts -- a list
+    (one per seed), or for ``deterministic`` evaluators a single dict
+    that is replicated over the seed axis.  ``prepare(contexts,
+    policies, extra)`` is an optional whole-grid hook the runner calls
+    once up front; the grid-batched evaluators (fluid ODE, batched
+    planning LP) use it to solve the full (mix x policy) plane in ONE
+    vmapped run and cache per-cell metrics on the contexts.
+    """
+
+    name: str
+    fn: Callable
+    deterministic: bool = False
+    prepare: Optional[Callable] = None
+
+    def __call__(self, ctx, token: str, n: int, *, seeds, **extra) -> list:
+        out = self.fn(ctx, token, n, seeds=seeds, **extra)
+        if self.deterministic:
+            metrics = [dict(out) for _ in seeds]
+        else:
+            metrics = [dict(m) for m in out]
+            if len(metrics) != len(seeds):
+                raise SweepSchemaError(
+                    f"evaluator {self.name!r} returned {len(metrics)} "
+                    f"metric dicts for {len(seeds)} seeds")
+        return [CellResult(ctx.mix.name, token, int(n), si, m)
+                for si, m in enumerate(metrics)]
+
+
+EVALUATOR_REGISTRY: Dict[str, Evaluator] = {}
+
+
+def register_evaluator(name: str, *, deterministic: bool = False,
+                       prepare: Optional[Callable] = None) -> Callable:
+    """Decorator: register ``fn`` as the evaluator behind ``name``.
+
+    The canonical names live in :data:`EVALUATORS`; the built-in
+    implementations register themselves on first import of
+    :mod:`repro.sweep.evaluators`.
+    """
+
+    def deco(fn: Callable) -> Callable:
+        EVALUATOR_REGISTRY[name] = Evaluator(
+            name=name, fn=fn, deterministic=deterministic, prepare=prepare)
+        return fn
+
+    return deco
+
+
+def get_evaluator(name: str) -> Evaluator:
+    """The :class:`Evaluator` registered under ``name``."""
+    if name not in EVALUATOR_REGISTRY:
+        import repro.sweep.evaluators  # noqa: F401 - registers built-ins
+    try:
+        return EVALUATOR_REGISTRY[name]
+    except KeyError:
+        raise SweepSchemaError(
+            f"no evaluator registered under {name!r} "
+            f"(known: {sorted(EVALUATOR_REGISTRY)})") from None
 
 
 @dataclass

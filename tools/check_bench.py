@@ -54,7 +54,9 @@ ARTIFACTS = {
     "matched": dict(bench="bench_matched", required=[]),
     "matched_jax": dict(bench="bench_matched", required=[]),
     "optimality_gap": dict(bench="bench_optimality_gap", committed=True,
-                           required=["rows", "gap_monotone_bundled",
+                           required=["rows", "ns", "ci_half_width",
+                                     "placement",
+                                     "gap_monotone_bundled",
                                      "gap_monotone_separate",
                                      "r_star_agreement_rel",
                                      "budget_exhausted"]),
@@ -135,6 +137,42 @@ def check_engine_speed(payload: dict) -> list:
     return errors
 
 
+def check_optimality_gap(payload: dict) -> list:
+    """Numeric gates for the many-GPU optimality-gap study.
+
+    The committed artifact is produced in ``--full`` mode and promises
+    the production-scale curve: n out to 65536 with every row's
+    revenue-gap CI half-width (1.96 x seed-axis standard error) at or
+    below 0.5% -- the statistical-resolution gate, separate from the
+    structural ``noise_floor_pct`` the monotonicity contract uses.
+    CI's ``bench-smoke`` regenerates the file in quick mode (toy sizes,
+    few seeds), where only the structural keys are checked.
+    """
+    errors = []
+    if payload.get("quick"):
+        return errors
+    ns = payload.get("ns") or []
+    if not ns or max(ns) < 65536:
+        errors.append(
+            f"ns = {ns!r}: the full-mode study must extend to n >= 65536")
+    ci = payload.get("ci_half_width")
+    if not isinstance(ci, (int, float)) or ci > 0.005:
+        errors.append(
+            f"ci_half_width = {ci!r} > 0.005: a full-mode row's revenue-"
+            f"gap CI is wider than the 0.5% resolution gate (raise the "
+            f"per-n seed/window schedule)")
+    floor = payload.get("noise_floor_pct", 1.0)
+    for row in payload.get("rows") or []:
+        if row.get("gap_pct", 0.0) < -floor:
+            errors.append(
+                f"row {row.get('scheme')}/n={row.get('n')}: gap_pct = "
+                f"{row.get('gap_pct')!r} < -{floor} (engine 'beating' the "
+                f"fluid optimum is a measurement artifact -- e.g. a "
+                f"float32 clock stall at production n; rerun with "
+                f"extra['ctmc_jax']['x64'])")
+    return errors
+
+
 def check(root: Path) -> list:
     errors = []
     benches = registry_benches(root)
@@ -176,6 +214,9 @@ def check(root: Path) -> list:
                 errors.append(f"{rel}: missing required key {key!r}")
         if stem == "engine_speed":
             errors.extend(f"{rel}: {e}" for e in check_engine_speed(payload))
+        if stem == "optimality_gap":
+            errors.extend(f"{rel}: {e}"
+                          for e in check_optimality_gap(payload))
         for where, val in iter_budget_keys(payload):
             if val != 0:
                 errors.append(

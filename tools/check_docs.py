@@ -27,7 +27,8 @@ from pathlib import Path
 
 DOCS = ("README.md", "docs/ARCHITECTURE.md", "docs/SIMULATORS.md",
         "docs/WORKLOADS.md", "docs/PLANNING.md", "docs/CALIBRATION.md",
-        "benchmarks/README.md", "ROADMAP.md", "CHANGES.md")
+        "docs/SHARDING.md", "benchmarks/README.md", "ROADMAP.md",
+        "CHANGES.md")
 
 LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
 
@@ -72,6 +73,52 @@ def mentioned_evaluators(md: str):
         for m in rx.finditer(md):
             names.update(p for p in m.group(1).split(",") if p)
     return names
+
+
+# how docs name batch placements (CLI flag, call kwarg, extra-dict JSON,
+# backticked prose) -- same idea as the evaluator patterns
+PLACEMENT_RES = (
+    re.compile(r"--placement[ =]+([a-z_][a-z_,]*)"),
+    re.compile(r"placement=\"([a-z_]+)\""),
+    re.compile(r"\"placement\":\s*\"([a-z_]+)\""),
+    re.compile(r"`([a-z_]+)` placement"),
+    re.compile(r"placements? `([a-z_]+)`"),
+)
+
+
+def known_placements(root: Path):
+    """The placement catalog, or an error string if it cannot load."""
+    sys.path.insert(0, str(root / "src"))
+    try:
+        from repro.sweep.sharded import PLACEMENTS
+        return set(PLACEMENTS), None
+    except Exception as exc:  # missing dep / broken import = check error
+        return None, f"cannot import repro.sweep.sharded ({exc})"
+
+
+def mentioned_placements(md: str):
+    names = set()
+    for rx in PLACEMENT_RES:
+        for m in rx.finditer(md):
+            names.update(p for p in m.group(1).split(",") if p)
+    return names
+
+
+def check_placement_catalog(root: Path, registry) -> list:
+    """Reverse direction of the placement check: every registered
+    placement must be documented in docs/SHARDING.md's catalog."""
+    doc = root / "docs" / "SHARDING.md"
+    if registry is None:
+        return []
+    if not doc.exists():
+        return ["docs/SHARDING.md: missing (the placement catalog must "
+                "be documented there)"]
+    ticked = set(re.findall(r"`([a-z0-9_]+)`", doc.read_text()))
+    return [
+        f"docs/SHARDING.md: registered placement {name!r} is not "
+        f"documented in the catalog"
+        for name in sorted(registry - ticked)
+    ]
 
 
 # how docs name workload scenarios (CLI flags, MixSpec JSON, backticked
@@ -296,6 +343,9 @@ def check(root: Path) -> list:
     registry, reg_err = known_evaluators(root)
     if reg_err:
         errors.append(f"evaluator registry: {reg_err}")
+    placements, plc_err = known_placements(root)
+    if plc_err:
+        errors.append(f"placement catalog: {plc_err}")
     scenarios, scn_err = known_scenarios(root)
     if scn_err:
         errors.append(f"scenario registry: {scn_err}")
@@ -325,6 +375,11 @@ def check(root: Path) -> list:
                 errors.append(
                     f"{rel}: evaluator {name!r} not in repro.sweep "
                     f"registry {sorted(registry)}")
+        if placements is not None:
+            for name in sorted(mentioned_placements(md) - placements):
+                errors.append(
+                    f"{rel}: placement {name!r} not in the "
+                    f"repro.sweep.sharded catalog {sorted(placements)}")
         if scenarios is not None:
             for name in sorted(mentioned_scenarios(md) - scenarios):
                 errors.append(
@@ -335,6 +390,7 @@ def check(root: Path) -> list:
                 errors.append(
                     f"{rel}: iteration-time model {name!r} not in the "
                     f"repro.calibration registry {sorted(models)}")
+    errors.extend(check_placement_catalog(root, placements))
     errors.extend(check_scenario_catalog(root, scenarios))
     errors.extend(check_model_catalog(root, models))
     errors.extend(check_evaluator_catalog(root, registry))
