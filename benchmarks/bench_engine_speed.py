@@ -1,6 +1,6 @@
 """Micro-benchmark: events/sec of the JAX trace-replay engine hot path.
 
-Four legs over the same decode-heavy saturated workload (the regime the
+Five legs over the same decode-heavy saturated workload (the regime the
 fast-forward kernel is built for -- admission-blocked servers let one
 scan step retire a whole batch of events):
 
@@ -10,13 +10,17 @@ scan step retire a whole batch of events):
   k_events=1``: the pre-hot-path one-event-per-step scan.
 * ``hot``        -- ``fastforward=True``: the multi-event stepping
   kernel (see the engine docstring's *multi-event blocks* section).
+* ``hot+tlm``    -- the hot leg again with time-binned telemetry probes
+  ON (:mod:`repro.telemetry.probes`); its events/sec regression vs the
+  bare hot leg is the probes' measured overhead, gated < 10% by
+  ``tools/check_bench.py`` (the docs/OBSERVABILITY.md contract).
 * ``stream``     -- :class:`repro.serving.engine_stream.StreamingEngineJAX`
   fed by an on-device :class:`repro.workloads.batch.ScenarioStream`:
   fixed working set, unbounded trace.  In ``--full`` mode this leg
   replays >= 1e6 requests -- the run the host-padded engine cannot
   size (its tables would hold every request at once).
 
-All legs are timed with :func:`repro.calibration.measure.timeit_median`
+All legs are timed with :func:`repro.telemetry.timing.timeit_median`
 (warmup + median-of-reps; the warmup also discards jit compilation), and
 jax legs report **events/sec** (arrivals + iteration completions), the
 engine's native unit of progress.  ``speedup`` keeps its historical
@@ -35,7 +39,6 @@ import time
 
 import numpy as np
 
-from repro.calibration.measure import timeit_median
 from repro.core.planning import solve_bundled_lp
 from repro.core.policies import gate_and_route
 from repro.core.types import WorkloadClass
@@ -46,7 +49,7 @@ from repro.serving.engine_stream import StreamingEngineJAX
 from repro.workloads import get_scenario
 from repro.workloads.batch import ScenarioStream
 
-from .common import PRICING, PRIM, fmt_table, save
+from .common import PRICING, PRIM, fmt_table, save, timeit_median
 
 REPS = 32      # jax replication batch (vmapped)
 REPS_PY = 8    # python serial replications (rates, not totals, compare)
@@ -123,6 +126,30 @@ def run(quick: bool = True) -> dict:
         }
     ips_jx = legs["hot"]["iters"] / legs["hot"]["wall_s"]
 
+    # -- telemetry overhead: the hot leg again with probes ON -------------
+    # the observability contract (docs/OBSERVABILITY.md) bounds the
+    # probes-on events/sec regression at < 10%; check_bench gates it
+    t_eng = ClusterEngineJAX(CLASSES, policy,
+                             EngineConfig(PRIM, PRICING, n), trace,
+                             horizon=horizon, fastforward=True,
+                             telemetry=True)
+
+    def tlm_leg():
+        tlm_leg.raw = engine_run(t_eng.params,
+                                 [t_eng._key(s) for s in seeds],
+                                 placement="vmap", **t_eng.statics)
+        jax.block_until_ready(tlm_leg.raw)
+
+    wall_tlm = timeit_median(tlm_leg, warmup=warmup, reps=reps)
+    ev_tlm = _events(tlm_leg.raw)
+    eps_tlm = ev_tlm / wall_tlm
+    tlm_overhead_pct = 100.0 * (1.0 - eps_tlm
+                                / legs["hot"]["events_per_sec"])
+    legs["hot_telemetry"] = {
+        "wall_s": wall_tlm, "events": ev_tlm, "events_per_sec": eps_tlm,
+        "overhead_pct": tlm_overhead_pct,
+    }
+
     # -- streamed leg: on-device trace generation, fixed working set ------
     # quick replays the scenario's nominal horizon; full stretches it
     # until the stream exceeds one million requests
@@ -172,6 +199,9 @@ def run(quick: bool = True) -> dict:
                      "ev_per_step": round(legs[tag]["ev_per_step"], 1),
                      "rate": round(legs[tag]["iters"]
                                    / legs[tag]["wall_s"])})
+    rows.append({"leg": "hot+tlm", "wall_s": round(wall_tlm, 2),
+                 "events_per_sec": round(eps_tlm), "ev_per_step": "-",
+                 "rate": f"{tlm_overhead_pct:+.1f}%"})
     rows.append({"leg": "stream", "wall_s": round(s_wall, 2),
                  "events_per_sec": round(stream["events_per_sec"]),
                  "ev_per_step": "-", "rate": stream["requests"]})
@@ -185,6 +215,7 @@ def run(quick: bool = True) -> dict:
                    / legs["legacy"]["events_per_sec"])
     print(f"[engine_speed] hot-path {speedup_hot:.2f}x events/sec over "
           f"legacy engine_jax; jax {speedup:.1f}x iters/sec over python; "
+          f"telemetry overhead {tlm_overhead_pct:+.1f}%; "
           f"streamed {stream['requests']} requests in {s_wall:.1f}s "
           f"(window {stream['window_peak']}/{stream['window']})")
     out = {
@@ -198,6 +229,8 @@ def run(quick: bool = True) -> dict:
         "speedup": speedup,
         "events_per_sec_legacy": legs["legacy"]["events_per_sec"],
         "events_per_sec_hot": legs["hot"]["events_per_sec"],
+        "events_per_sec_hot_telemetry": eps_tlm,
+        "telemetry_overhead_pct": tlm_overhead_pct,
         "speedup_hot": speedup_hot,
         "legs": legs, "stream": stream,
         "rev_rate_python": py_leg.rev,

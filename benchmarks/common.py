@@ -11,17 +11,39 @@ from repro.core.types import Pricing, ServicePrimitives
 from repro.sweep.evaluators import (evaluate_trace_policy,
                                     planner_classes_from_trace)
 from repro.sweep.run import fmt_table  # noqa: F401 - shared table formatter
+from repro.telemetry.manifest import (append_record, payload_digest,
+                                      run_record)
+from repro.telemetry.timing import timeit_median  # noqa: F401 - canonical
 
 ART = Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+MANIFESTS = ART.parents[0] / "manifests" / "runs.jsonl"
 
 PRIM = ServicePrimitives()       # paper's A100/Qwen3-8B calibration
 PRICING = Pricing(c_p=0.1, c_d=0.2)
 
 
 def save(name: str, payload: dict):
+    """Write one benchmark artifact with an embedded RunRecord.
+
+    Every ``artifacts/bench/<name>.json`` carries provenance under its
+    ``"manifest"`` key (git SHA, versions, a digest of the payload
+    *minus* that key -- see :func:`repro.telemetry.manifest.
+    payload_digest`); the same record also appends to
+    ``artifacts/manifests/runs.jsonl``.  ``tools/check_bench.py`` gates
+    both the presence and the digest of the embedded record.
+    """
+    payload = dict(payload)
+    record = run_record(
+        kind="bench", name=name,
+        extra={"payload_digest": payload_digest(payload),
+               "mode": payload.get("mode")})
+    payload["manifest"] = record
     ART.mkdir(parents=True, exist_ok=True)
-    (ART / f"{name}.json").write_text(json.dumps(payload, indent=1,
-                                                 default=float))
+    out = ART / f"{name}.json"
+    out.write_text(json.dumps(payload, indent=1, default=float))
+    append_record(dict(record, artifacts={
+        str(out.relative_to(ART.parents[1])): record["extra"][
+            "payload_digest"]}), MANIFESTS)
 
 
 def planner_classes(trace, n, n_classes=2, theta=3e-4):

@@ -57,6 +57,15 @@ SUITE = [
 ]
 
 
+def _artifact_state() -> dict:
+    """(size, mtime_ns) per JSON artifact under artifacts/ -- cheap
+    before/after snapshot to detect a bench that silently wrote
+    nothing."""
+    root = ART.parent
+    return {str(p): (p.stat().st_size, p.stat().st_mtime_ns)
+            for p in root.rglob("*.json") if p.is_file()}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
@@ -70,12 +79,22 @@ def main(argv=None):
             continue
         print(f"\n{'=' * 72}\n== bench: {name}\n{'=' * 72}", flush=True)
         t0 = time.time()
+        before = _artifact_state()
         try:
             mod.run(quick=not args.full)
             print(f"== {name} done in {time.time() - t0:.1f}s", flush=True)
         except Exception:
             failures.append(name)
             traceback.print_exc()
+            continue
+        if args.full and _artifact_state() == before:
+            # a full-mode bench that writes no artifact produced nothing
+            # a paper table can cite; fail loudly instead of shipping a
+            # green run with a silent hole in artifacts/bench/
+            failures.append(name)
+            print(f"== {name}: FAILED -- wrote no artifact under "
+                  f"{ART.parent} in --full mode (every full-mode bench "
+                  f"must save() its table)", flush=True)
     if failures:
         raise SystemExit(f"benchmark failures: {failures}")
     print("\nall benchmarks green")

@@ -24,12 +24,11 @@ elsewhere.
 from __future__ import annotations
 
 import math
-import statistics
-import time
 from dataclasses import dataclass
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 from repro.launch.mesh import v5e_constants
+from repro.telemetry.timing import timeit_median
 
 from .grid import CalibrationGrid, GridCell
 
@@ -72,22 +71,8 @@ class Sample:
                    tau=float(d["tau"]), backend=str(d["backend"]))
 
 
-def timeit_median(fn: Callable[[], object], *, warmup: int = 2,
-                  reps: int = 5) -> float:
-    """Median-of-``reps`` wall time of ``fn()`` after ``warmup`` calls.
-
-    Replaces the old ``bench_calibration`` bare ``time.time`` reps=3
-    loop: ``perf_counter`` is monotonic and the median discards the
-    recompile/GC outliers that made the benchmark flaky.
-    """
-    for _ in range(warmup):
-        fn()
-    times = []
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        fn()
-        times.append(time.perf_counter() - t0)
-    return statistics.median(times)
+# timeit_median moved to repro.telemetry.timing (one canonical timing
+# helper for calibration + every benchmark); re-exported here unchanged.
 
 
 # --------------------------------------------------------------- analytic

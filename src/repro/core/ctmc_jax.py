@@ -66,8 +66,12 @@ Supported policy surface (mirrors :class:`CTMCSimulator` exactly):
   (incl. the EC.7 pool weights);
 * charging: ``bundled`` | ``separate``.
 
-Not supported: trajectory recording (``record_every``) and warm starts --
-use the Python engine for those.
+Not supported: event-resolution trajectory recording (``record_every``)
+and warm starts -- use the Python engine for those.  Time-*binned*
+trajectories are available on-device via ``telemetry=`` (a
+:class:`repro.telemetry.probes.ProbeSpec`), which threads fixed-shape
+``tlm_*`` probe arrays through the scan carry; ``telemetry=None`` (the
+default) compiles the byte-identical bare kernel.
 """
 
 from __future__ import annotations
@@ -81,6 +85,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compat import prng_key
+from repro.telemetry.probes import (ctmc_probe_carry, extract_probes,
+                                    resolve_probe_spec,
+                                    wrap_ctmc_step_probes)
 
 from .policies import FCFSGate, OccupancyGate, PolicySpec, PriorityRatioGate
 from .simulator import CTMCResult
@@ -348,10 +355,10 @@ def _build_step(params: dict, key, gate_kind: str, router_kind: str,
     return step
 
 
-def _init_carry(I: int, dtype) -> dict:
+def _init_carry(I: int, dtype, telemetry=None) -> dict:
     z = jnp.zeros(I, dtype)
     s = jnp.zeros((), dtype)
-    return {
+    c = {
         "qp": z, "x": z, "qdm": z, "qds": z, "ym": z, "ys": z,
         "t": s, "rev": s,
         "acc_x": z, "acc_ym": z, "acc_ys": z, "acc_qp": z, "acc_qd": z,
@@ -359,19 +366,25 @@ def _init_carry(I: int, dtype) -> dict:
         "completions": z, "arrivals": z, "ab_p": z, "ab_d": z,
         "clip_steps": s, "n_events": s,
     }
+    if telemetry is not None:
+        c.update(ctmc_probe_carry(telemetry, I=I, dtype=dtype))
+    return c
 
 
 _STATICS = ("n_steps", "gate_kind", "router_kind", "charging", "has_pw",
-            "stepping")
+            "stepping", "telemetry")
 
 
 def _run_core(params, key, *, n_steps, gate_kind, router_kind, charging,
-              has_pw, stepping):
+              has_pw, stepping, telemetry=None):
     I = params["lam_tot"].shape[0]
     step = _build_step(params, key, gate_kind, router_kind, charging,
                        has_pw, stepping)
-    carry, _ = jax.lax.scan(step, _init_carry(I, params["lam_tot"].dtype),
-                            jnp.arange(n_steps, dtype=jnp.uint32))
+    if telemetry is not None:
+        step = wrap_ctmc_step_probes(step, telemetry, params["horizon"])
+    carry, _ = jax.lax.scan(
+        step, _init_carry(I, params["lam_tot"].dtype, telemetry),
+        jnp.arange(n_steps, dtype=jnp.uint32))
     return carry
 
 
@@ -380,12 +393,13 @@ run_uniformized = jax.jit(_run_core, static_argnames=_STATICS)
 
 @partial(jax.jit, static_argnames=_STATICS)
 def run_uniformized_batch(params, keys, *, n_steps, gate_kind, router_kind,
-                          charging, has_pw, stepping):
+                          charging, has_pw, stepping, telemetry=None):
     """vmap of :func:`run_uniformized` over a leading batch of PRNG keys."""
     return jax.vmap(
         lambda k: _run_core(params, k, n_steps=n_steps, gate_kind=gate_kind,
                             router_kind=router_kind, charging=charging,
-                            has_pw=has_pw, stepping=stepping))(keys)
+                            has_pw=has_pw, stepping=stepping,
+                            telemetry=telemetry))(keys)
 
 
 class UniformizedCTMC:
@@ -413,7 +427,7 @@ class UniformizedCTMC:
                  policy: PolicySpec, n: int, horizon: float,
                  warmup: float = 0.0, *, stepping: str = "events",
                  cap_margin: float = 6.0, steps_margin: float = 6.0,
-                 n_steps: int | None = None):
+                 n_steps: int | None = None, telemetry=None):
         self.classes = tuple(classes)
         self.policy = policy
         self.n = int(n)
@@ -491,7 +505,9 @@ class UniformizedCTMC:
         self._static = dict(n_steps=self.n_steps, gate_kind=self.gate_kind,
                             router_kind=self.router_kind,
                             charging=self.charging, has_pw=self.has_pw,
-                            stepping=self.stepping)
+                            stepping=self.stepping,
+                            telemetry=resolve_probe_spec(telemetry))
+        self.telemetry = self._static["telemetry"]
 
     # -- raw (device array) interface -------------------------------------
     def _key(self, seed):
@@ -533,6 +549,17 @@ class UniformizedCTMC:
             return raw
         raise ValueError(f"unknown placement {placement!r} (expected "
                          f"single|vmap|shard_map)")
+
+    def telemetry_from_raw(self, raw: dict) -> dict:
+        """Host-side probe report (:func:`extract_probes`) from a raw
+        carry of a telemetry-enabled run.  The aggregate chain fills the
+        trajectory probes only -- per-request latency histograms do not
+        exist at the class-aggregate level."""
+        if self.telemetry is None:
+            raise ValueError("this UniformizedCTMC was built without "
+                             "telemetry=; pass a ProbeSpec/True at init")
+        return extract_probes(raw, self.telemetry, horizon=self.horizon,
+                              n_servers=self.n)
 
     # -- CTMCResult interface ----------------------------------------------
     def _to_result(self, o: dict) -> CTMCResult:

@@ -26,6 +26,8 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from repro.telemetry.probes import PyProbes, resolve_probe_spec
+
 from .policies import PolicySpec
 from .types import (Pricing, ServicePrimitives, WorkloadClass, rate_arrays,
                     resolve_primitives)
@@ -50,6 +52,9 @@ class CTMCResult:
     avg_qd: np.ndarray
     n_events: int = 0  # transitions actually applied (excl. the final break)
     trajectory: Optional[dict] = field(default=None, repr=False)
+    # extract_probes() report for telemetry-enabled runs; summary fields
+    # above never depend on it (telemetry-invariance contract)
+    telemetry: Optional[dict] = field(default=None, repr=False)
 
 
 class _View:
@@ -95,6 +100,7 @@ class CTMCSimulator:
         n: int,
         seed: int = 0,
         record_every: float = 0.0,
+        telemetry=None,
     ):
         self.classes = tuple(classes)
         self.prim = prim = resolve_primitives(prim)
@@ -106,6 +112,7 @@ class CTMCSimulator:
         self.B = prim.batch_cap
         self.M = policy.mixed_target(self.n)
         self.record_every = record_every
+        self.telemetry = resolve_probe_spec(telemetry)
 
         I = self.I
         self.Qp = np.zeros(I)
@@ -289,6 +296,10 @@ class CTMCSimulator:
         )
         next_rec = 0.0
         n_events = 0
+        probes = (PyProbes(self.telemetry,
+                           horizon=horizon if horizon > 0 else 1.0,
+                           n_servers=self.n, n_classes=I)
+                  if self.telemetry is not None else None)
 
         t = 0.0
         rng = self.rng
@@ -377,6 +388,15 @@ class CTMCSimulator:
                 else:
                     self.Qdm[i] -= 1
                 ab_d[i] += 1
+            if probes is not None:
+                # post-event state, matching wrap_ctmc_step_probes: queue
+                # = Q_p, occupancy = Y_m + Y_s, prefills in flight = X
+                if cat >= 4:
+                    probes.count(t, drops=1.0)
+                probes.sample(
+                    t, queue_depth=self.Qp,
+                    decode_occupancy=float((self.Ym + self.Ys).sum()),
+                    prefill_in_flight=float(self.X.sum()))
 
         if traj is not None and (not traj["t"] or traj["t"][-1] < t):
             # final sample at the (clamped) end time, so the trajectory
@@ -400,4 +420,5 @@ class CTMCSimulator:
             trajectory=(
                 {k: np.array(v) for k, v in traj.items()} if traj else None
             ),
+            telemetry=probes.extract() if probes is not None else None,
         )

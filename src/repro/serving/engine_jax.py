@@ -149,6 +149,9 @@ from repro.core.policies import (FCFSGate, OccupancyGate, PolicySpec,
                                  PriorityRatioGate)
 from repro.core.types import WorkloadClass
 from repro.data.traces import TraceTensors, tensorize_trace
+from repro.telemetry.probes import (extract_probes, hist_edges,
+                                    probe_carry, resolve_probe_spec,
+                                    wrap_engine_step_probes)
 
 from .engine_sim import EngineConfig
 
@@ -218,8 +221,16 @@ def _build_step(params: dict, key, *, n: int, B: int, gate_kind: str,
                 router_kind: str, charging: str, partition: str,
                 sarathi: bool, unchunked: bool, prefill_only: bool,
                 has_pw: bool, expiry: bool, model_kind: str = "affine",
-                k_events: int = 1, fastforward: bool = False):
+                k_events: int = 1, fastforward: bool = False,
+                telemetry=None):
     dtype = params["t_arr"].dtype
+    # telemetry is a static: probes-off compiles the byte-identical
+    # bare kernel.  All in-step probe work lives in the post-step
+    # wrapper at the bottom of this builder; the latency histograms
+    # need no hooks at all -- the ``t_first``/``t_last`` min/max marks
+    # the step already maintains are bucketed once after the loop
+    # (:func:`_fill_latency_hists`), keeping the probed step fusable.
+    tlm = telemetry
     R = params["t_arr"].shape[0]
     I = params["x_star"].shape[0]
     W = B + 1  # placement bound per event: freed slots + the routed job
@@ -830,6 +841,11 @@ def _build_step(params: dict, key, *, n: int, B: int, gate_kind: str,
         c["alive"] = jnp.minimum(ta2, c["t_next"].min()) <= params["h_eff"]
         return c
 
+    def finish(step_fn):
+        if tlm is None:
+            return step_fn
+        return wrap_engine_step_probes(step_fn, tlm, params)
+
     if not multi:
         def step(carry, idx):
             c = dict(carry)
@@ -838,7 +854,7 @@ def _build_step(params: dict, key, *, n: int, B: int, gate_kind: str,
                 c = ffwd(c)
             return event(c, idx, None)
 
-        return step
+        return finish(step)
 
     def step(carry, idx):
         # idx is the BLOCK index; events keep their global index so the
@@ -865,7 +881,7 @@ def _build_step(params: dict, key, *, n: int, B: int, gate_kind: str,
             jnp.concatenate(dfr["tl_v"]))
         return c
 
-    return step
+    return finish(step)
 
 
 def _count_pending(c, n, dtype):
@@ -877,7 +893,8 @@ def _count_pending(c, n, dtype):
 
 def _init_carry(R: int, n: int, B: int, I: int, dtype,
                 router_kind: str, has_pw: bool, expiry: bool,
-                k_events: int = 1, fastforward: bool = False) -> dict:
+                k_events: int = 1, fastforward: bool = False,
+                telemetry=None) -> dict:
     W = B + 1
     c = {
         "st": jnp.zeros(R, jnp.int32),
@@ -924,28 +941,62 @@ def _init_carry(R: int, n: int, B: int, I: int, dtype,
         c["srv"] = jnp.full(R, -1, jnp.int32)
     if router_kind == "randomized":
         c["pool"] = jnp.full(R, -1, jnp.int32)
+    if telemetry is not None:
+        # fixed-shape probe arrays under tlm_ keys: _summary never
+        # reads them, so the non-telemetry outputs stay bitwise equal
+        c.update(probe_carry(telemetry, n=n, I=I, dtype=dtype))
+    return c
+
+
+def _fill_latency_hists(carry: dict, t_arr, spec) -> dict:
+    """Bucket the per-request latency marks into ``tlm_ttft``/``tlm_e2e``.
+
+    The step already maintains ``t_first`` (min-scatter of every
+    emission time) and ``t_last`` (max-scatter; equals the completion
+    time for ``_DONE`` rows), so TTFT = ``t_first - t_arr`` and E2E =
+    ``t_last - t_arr`` are exact per-request latencies and ONE
+    searchsorted + scatter after the loop observes each request exactly
+    once -- event-for-event what per-step histogram hooks would record,
+    at none of their per-step fusion-breaking cost (the < 10% overhead
+    contract of docs/OBSERVABILITY.md).  Rows that never emitted
+    (``t_first`` infinite; includes padding) and rows not ``_DONE``
+    carry zero weight; their NaN/out-of-band differences still land on
+    a valid bucket index, so the masked adds are no-ops.
+    """
+    dt = t_arr.dtype
+    edges = jnp.asarray(hist_edges(spec), dt)
+    c = dict(carry)
+    hb = jnp.searchsorted(edges, c["t_first"] - t_arr)
+    c["tlm_ttft"] = c["tlm_ttft"].at[hb].add(
+        jnp.isfinite(c["t_first"]).astype(dt))
+    hb = jnp.searchsorted(edges, c["t_last"] - t_arr)
+    c["tlm_e2e"] = c["tlm_e2e"].at[hb].add(
+        (c["st"] == _DONE).astype(dt))
     return c
 
 
 _STATICS = ("n_steps", "n", "B", "gate_kind", "router_kind", "charging",
             "partition", "sarathi", "unchunked", "prefill_only", "has_pw",
-            "expiry", "loop", "model_kind", "k_events", "fastforward")
+            "expiry", "loop", "model_kind", "k_events", "fastforward",
+            "telemetry")
 
 
 def _run_core(params, key, *, n_steps, n, B, gate_kind, router_kind,
               charging, partition, sarathi, unchunked, prefill_only,
               has_pw, expiry, loop="while", model_kind="affine",
-              k_events=1, fastforward=False):
+              k_events=1, fastforward=False, telemetry=None):
     step = _build_step(params, key, n=n, B=B, gate_kind=gate_kind,
                        router_kind=router_kind, charging=charging,
                        partition=partition, sarathi=sarathi,
                        unchunked=unchunked, prefill_only=prefill_only,
                        has_pw=has_pw, expiry=expiry, model_kind=model_kind,
-                       k_events=k_events, fastforward=fastforward)
+                       k_events=k_events, fastforward=fastforward,
+                       telemetry=telemetry)
     R = params["t_arr"].shape[0]
     I = params["x_star"].shape[0]
     init = _init_carry(R, n, B, I, params["t_arr"].dtype,
-                       router_kind, has_pw, expiry, k_events, fastforward)
+                       router_kind, has_pw, expiry, k_events, fastforward,
+                       telemetry)
     # the loop iterates over k-event BLOCKS; a final partial block runs
     # its overhang as proven no-op events (is_arr/is_iter/admit all
     # force False once no event is pending)
@@ -956,6 +1007,8 @@ def _run_core(params, key, *, n_steps, n, B, gate_kind, router_kind,
 
         carry, _ = jax.lax.scan(body, init,
                                 jnp.arange(n_blocks, dtype=jnp.uint32))
+        if telemetry is not None:
+            carry = _fill_latency_hists(carry, params["t_arr"], telemetry)
         return carry
     # early-exit form: same step, same budget cap, but the loop stops as
     # soon as no event is pending before the horizon (the scan form pays
@@ -970,6 +1023,8 @@ def _run_core(params, key, *, n_steps, n, B, gate_kind, router_kind,
 
     carry, _ = jax.lax.while_loop(
         cond, body, (init, jnp.zeros((), jnp.int32)))
+    if telemetry is not None:
+        carry = _fill_latency_hists(carry, params["t_arr"], telemetry)
     return carry
 
 
@@ -1118,7 +1173,8 @@ class ClusterEngineJAX:
                  cfg: EngineConfig, trace, horizon: float, *,
                  drain: bool = False, max_steps: Optional[int] = None,
                  max_requests: Optional[int] = None, loop: str = "while",
-                 k_events: int = 1, fastforward: bool = False):
+                 k_events: int = 1, fastforward: bool = False,
+                 telemetry=None):
         if loop not in ("while", "scan"):
             raise ValueError(f"loop must be while|scan, got {loop!r}")
         if int(k_events) < 1:
@@ -1257,7 +1313,11 @@ class ClusterEngineJAX:
             # where every request has patience == inf
             expiry=bool(np.isfinite(tt.patience[arrived]).any()),
             loop=loop, model_kind=self.model_kind,
-            k_events=int(k_events), fastforward=bool(fastforward))
+            k_events=int(k_events), fastforward=bool(fastforward),
+            # hashable ProbeSpec (or None): rides the jit static path,
+            # so probes-off compiles the byte-identical bare kernel
+            telemetry=resolve_probe_spec(telemetry))
+        self.telemetry = self._static["telemetry"]
 
     # -- raw (device array) interface -------------------------------------
     def _key(self, seed):
@@ -1339,6 +1399,50 @@ class ClusterEngineJAX:
         reps = host["t"].shape[0]
         return [self._summary({k: v[r] for k, v in host.items()})
                 for r in range(reps)]
+
+    # -- telemetry interface ----------------------------------------------
+    def telemetry_from_raw(self, raw: dict) -> dict:
+        """Host-side probe report (:func:`repro.telemetry.extract_probes`)
+        from a raw carry; batched carries reduce over their leading
+        axes.  Requires the engine to have been built with
+        ``telemetry=``."""
+        if self.telemetry is None:
+            raise ValueError("engine was built without telemetry; pass "
+                             "telemetry=ProbeSpec(...) (or True)")
+        return extract_probes(raw, self.telemetry,
+                              horizon=self.h_eff if self.h_eff > 0 else 1.0,
+                              n_servers=self.n)
+
+    def lifecycle_records_from_raw(self, raw: dict,
+                                   limit: Optional[int] = None) -> list:
+        """Per-request lifecycle records for the Chrome-trace exporter
+        (:func:`repro.telemetry.lifecycle_events`) from a
+        SINGLE-replication raw carry.  The JAX carry tracks
+        arrival/first/last only, so queue wait and prefill render as one
+        merged span."""
+        st = np.asarray(raw["st"])
+        if st.ndim != 1:
+            raise ValueError("lifecycle records need a single-replication "
+                             "carry; index one replication first")
+        t_first = np.asarray(raw["t_first"], dtype=np.float64)
+        t_last = np.asarray(raw["t_last"], dtype=np.float64)
+        t_arr = np.asarray(self.params["t_arr"], dtype=np.float64)
+        cls = np.asarray(self.params["cls"])
+        names = ("not_arrived", "queued", "prefill", "buffered", "decode",
+                 "done", "abandoned")
+        records = []
+        for rid in np.nonzero(st != _NOT_ARRIVED)[0]:
+            records.append({
+                "rid": int(rid),
+                "cls": self.classes[int(cls[rid])].name,
+                "t_arr": float(t_arr[rid]),
+                "t_first": float(t_first[rid]),
+                "t_last": float(t_last[rid]),
+                "state": names[int(st[rid])],
+            })
+            if limit is not None and len(records) >= limit:
+                break
+        return records
 
     def run(self, seed=0) -> dict:
         return self._summary({k: np.asarray(v)

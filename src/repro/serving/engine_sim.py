@@ -33,6 +33,7 @@ from repro.core.online import OnlineController
 from repro.core.policies import PolicySpec
 from repro.core.types import Pricing, ServicePrimitives, WorkloadClass
 from repro.data.traces import Request
+from repro.telemetry.probes import PyProbes, resolve_probe_spec
 
 __all__ = ["EngineConfig", "EngineMetrics", "ClusterEngine"]
 
@@ -52,6 +53,11 @@ class EngineConfig:
     # when set, tau_mix/tau_solo come from the model instead of
     # (prim, solo_kv_slope).
     iter_model: Optional[object] = None
+    # Optional probe config (None/True/dict/repro.telemetry.ProbeSpec).
+    # None keeps the engine untouched; otherwise a PyProbes collector
+    # mirrors the device tlm_* arrays and ``metrics.telemetry`` /
+    # ``lifecycle_records()`` are populated after ``run``.
+    telemetry: Optional[object] = None
 
 
 @dataclass
@@ -60,6 +66,7 @@ class _Job:
     prefill_left: int
     tokens_out: int = 0
     server: int = -1
+    t_admit: float = float("nan")
     t_prefill_done: float = float("nan")
     t_first_token: float = float("nan")
     t_last_token: float = float("nan")
@@ -101,6 +108,9 @@ class EngineMetrics:
     per_class_completions: dict = field(default_factory=dict)
     per_class_arrivals: dict = field(default_factory=dict)
     queue_trace: list = field(default_factory=list)
+    # extract_probes() report when the engine ran with telemetry on;
+    # never read by summary(), so summaries stay telemetry-invariant
+    telemetry: Optional[dict] = None
 
     def revenue_rate(self) -> float:
         return self.revenue / self.horizon if self.horizon > 0 else 0.0
@@ -184,6 +194,8 @@ class ClusterEngine:
         self._heap: list = []
         self._counter = itertools.count()
         self._now = 0.0
+        self._probes: Optional[PyProbes] = None
+        self._jobs: list = []  # lifecycle records (telemetry runs only)
 
     # ------------------------------------------------------------------ utils
     @property
@@ -252,7 +264,10 @@ class ClusterEngine:
             job = self.prefill_q[i].popleft()
             srv.prefill = job
             job.server = srv.sid
+            job.t_admit = self._now
             self.X[i] += 1
+            if self._probes is not None:
+                self._probes.count(self._now, admit_class=i)
             self._wake(srv)
 
     def _free_slots(self, srv: _Server) -> int:
@@ -400,12 +415,16 @@ class ClusterEngine:
             if np.isnan(job.t_first_token):
                 job.t_first_token = self._now
                 self.metrics.ttft.append(self._now - job.req.t_arrival)
+                if self._probes is not None:
+                    self._probes.observe_ttft(self._now - job.req.t_arrival)
             job.t_last_token = self._now
             if job.tokens_out >= job.req.decode_len:
                 done.append(job)
         for job in done:
             srv.decodes.remove(job)
             self.metrics.completions += 1
+            if self._probes is not None:
+                self._probes.observe_e2e(self._now - job.req.t_arrival)
             self.metrics.per_class_completions[job.req.cls] = (
                 self.metrics.per_class_completions.get(job.req.cls, 0) + 1
             )
@@ -527,6 +546,12 @@ class ClusterEngine:
         if self.controller is not None:
             self._push(0.0, "control", None)
         next_qrec = 0.0
+        tspec = resolve_probe_spec(getattr(self.cfg, "telemetry", None))
+        if tspec is not None:
+            self._probes = PyProbes(
+                tspec, horizon=h_eff if h_eff > 0 else 1.0,
+                n_servers=self.cfg.n_servers, n_classes=self.I)
+        prev_ab = self.metrics.abandons
 
         while self._heap:
             t, _, kind, payload = heapq.heappop(self._heap)
@@ -539,7 +564,10 @@ class ClusterEngine:
                 self.metrics.per_class_arrivals[r.cls] = (
                     self.metrics.per_class_arrivals.get(r.cls, 0) + 1
                 )
-                self.prefill_q[r.cls].append(_Job(r, prefill_left=r.prompt_len))
+                job = _Job(r, prefill_left=r.prompt_len)
+                self.prefill_q[r.cls].append(job)
+                if self._probes is not None:
+                    self._jobs.append(job)
                 if self.controller is not None:
                     self.controller.observe_arrival(t, r.cls)
                 self._admit_prefills()
@@ -560,6 +588,19 @@ class ClusterEngine:
                 self.recover_server(payload[0])
             elif kind == "straggle":
                 self.set_straggler(payload[0], payload[1])
+            if self._probes is not None:
+                if self.metrics.abandons > prev_ab:
+                    self._probes.count(
+                        t, drops=self.metrics.abandons - prev_ab)
+                    prev_ab = self.metrics.abandons
+                self._probes.sample(
+                    t,
+                    queue_depth=[len(q) for q in self.prefill_q],
+                    decode_occupancy=sum(
+                        len(s.decodes) for s in self.servers),
+                    prefill_in_flight=sum(
+                        1 for s in self.servers if s.prefill is not None),
+                    busy=[s.busy for s in self.servers])
             if (
                 self.cfg.record_queues_every > 0
                 and self._now >= next_qrec
@@ -576,4 +617,29 @@ class ClusterEngine:
                 next_qrec = self._now + self.cfg.record_queues_every
 
         self.metrics.horizon = h_eff
+        if self._probes is not None:
+            self.metrics.telemetry = self._probes.extract()
         return self.metrics
+
+    def lifecycle_records(self, limit: Optional[int] = None) -> list:
+        """Request-lifecycle records for the Chrome-trace exporter
+        (:func:`repro.telemetry.trace.lifecycle_events`).  This engine
+        knows all three phase boundaries (admit, prefill-done, first
+        emission), so the trace renders queue/prefill/decode spans."""
+        if self._probes is None:
+            raise ValueError("lifecycle records need a telemetry-enabled "
+                             "run: set EngineConfig.telemetry")
+        recs = []
+        for job in (self._jobs if limit is None else self._jobs[:limit]):
+            done = job.tokens_out >= job.req.decode_len
+            recs.append({
+                "rid": int(job.req.rid),
+                "cls": self.classes[job.req.cls].name,
+                "t_arr": float(job.req.t_arrival),
+                "t_admit": float(job.t_admit),
+                "t_prefill_done": float(job.t_prefill_done),
+                "t_first": float(job.t_first_token),
+                "t_last": float(job.t_last_token),
+                "state": "done" if done else "active",
+            })
+        return recs

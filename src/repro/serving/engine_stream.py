@@ -57,6 +57,7 @@ from repro.core.policies import PolicySpec
 from repro.core.types import WorkloadClass
 from repro.data.traces import (TraceTensors, TraceValidationError,
                                chunk_trace, tensorize_trace)
+from repro.telemetry.probes import extract_probes, hist_edges
 
 from .engine_jax import (ClusterEngineJAX, _init_carry,
                          _DECODE, _DONE, _NOT_ARRIVED, _QUEUED,
@@ -90,13 +91,17 @@ class TraceChunkSource:
 
 
 @jax.jit
-def _compact_splice(carry, tbl, ch, h_eff):
+def _compact_splice(carry, tbl, ch, h_eff, tlm_edges=None):
     """Retire finished rows, compact survivors, splice the next chunk.
 
     Pure function of the carry, the per-request tables and one chunk;
     returns ``(carry', tbl', seg)`` where ``seg`` holds this splice's
     retired-row metric contributions and diagnostics (host-accumulated
-    in float64 -- segment-sized partial sums keep float32 exact).
+    in float64 -- segment-sized partial sums keep float32 exact).  With
+    telemetry on, ``tlm_edges`` (the log-spaced histogram edges) folds
+    the retired rows' TTFT/E2E latencies into the carry's ``tlm_ttft``/
+    ``tlm_e2e`` histograms before their time marks are evicted --
+    residual rows are folded host-side at end of stream.
     """
     c = dict(carry)
     tbl = dict(tbl)
@@ -126,6 +131,13 @@ def _compact_splice(carry, tbl, ch, h_eff):
             tpm, (t_last - t_first) / jnp.maximum(D - 1.0, 1.0), 0.0)),
         "tpot_n": jnp.sum(tpm.astype(f32)),
     }
+    if tlm_edges is not None:
+        # retired rows leave the window now: bucket their latencies
+        # while the t_first/t_last marks still align with this t_arr
+        hb = jnp.searchsorted(tlm_edges, t_first - tbl["t_arr"])
+        c["tlm_ttft"] = c["tlm_ttft"].at[hb].add(emitted.astype(f32))
+        hb = jnp.searchsorted(tlm_edges, t_last - tbl["t_arr"])
+        c["tlm_e2e"] = c["tlm_e2e"].at[hb].add(done.astype(f32))
 
     # stable keep-first permutation: unique integer keys, so the result
     # is deterministic and order-preserving without relying on sort
@@ -224,13 +236,14 @@ class StreamingEngineJAX:
 
     def __init__(self, classes: Sequence[WorkloadClass], policy: PolicySpec,
                  cfg: EngineConfig, horizon: float, *, window: int = 8192,
-                 fastforward: bool = True):
+                 fastforward: bool = True, telemetry=None):
         # an empty window-shaped trace gives us the full policy/params
         # lowering (and its validations) without duplicating it here
         base = ClusterEngineJAX(classes, policy, cfg,
                                 tensorize_trace([], pad_to=int(window)),
                                 horizon, drain=True,
-                                fastforward=fastforward)
+                                fastforward=fastforward,
+                                telemetry=telemetry)
         if base.router_kind not in ("solo_first", "local_fcfs"):
             raise ValueError(
                 "StreamingEngineJAX needs a deterministic global-buffer "
@@ -243,6 +256,11 @@ class StreamingEngineJAX:
         self.cfg = cfg
         self._statics = {k: v for k, v in base._static.items()
                          if k not in ("n_steps", "loop")}
+        self.telemetry = self._statics["telemetry"]
+        self._tlm_edges = (
+            jnp.asarray(hist_edges(self.telemetry),
+                        base.params["t_arr"].dtype)
+            if self.telemetry is not None else None)
 
     def run_stream(self, source, seed=0,
                    max_steps: Optional[int] = None) -> dict:
@@ -257,7 +275,7 @@ class StreamingEngineJAX:
         carry = _init_carry(Rw, base.n, int(base.params["B"]), self.I, dt,
                             st_["router_kind"], st_["has_pw"],
                             st_["expiry"], st_["k_events"],
-                            st_["fastforward"])
+                            st_["fastforward"], st_["telemetry"])
         # the per-segment push count is bounded by the working set, not
         # the whole trace: give the ring two windows of slack
         W = int(base.params["B"]) + 1
@@ -319,13 +337,20 @@ class StreamingEngineJAX:
                     # summation exceed arrivals + one clock bound
                     clock_budget = b
                 budget += b
-                carry, tbl, seg = _compact_splice(carry, tbl, arrs, h_eff)
+                carry, tbl, seg = _compact_splice(carry, tbl, arrs, h_eff,
+                                                  self._tlm_edges)
                 if bool(seg["overflow"]):
+                    tail = occupancy[-5:]
+                    trace = (", ".join(
+                        f"seg{n_segments - len(tail) + j}={v}"
+                        for j, v in enumerate(tail))
+                        if tail else "none (overflow on first splice)")
                     raise RuntimeError(
                         f"working-set overflow at t~{t_seam:.0f} (segment "
                         f"{n_segments}): {int(seg['n_live'])} live rows + "
                         f"{int(seg['n_new'])} new > window={Rw}; raise "
-                        "`window` (peak unfinished backlog exceeded)")
+                        "`window` (peak unfinished backlog exceeded); "
+                        f"occupancy after recent splices: {trace}")
                 occupancy.append(int(seg["n_live"]) + int(seg["n_new"]))
                 window_peak = max(window_peak, occupancy[-1])
                 requests += int(seg["n_new"])
@@ -369,6 +394,20 @@ class StreamingEngineJAX:
         next_t = min(next_arr, float(o["t_next"].min(initial=np.inf)))
         horizon = self.h_eff if self.h_eff > 0 else 1.0
         nan = float("nan")
+        if self.telemetry is not None:
+            # rows still in the window never hit a splice fold: bucket
+            # their latencies now (same f32 values the splice fold sees)
+            edges = np.asarray(self._tlm_edges)
+            t32 = np.asarray(tbl["t_arr"])
+            for key_, tmark, m in (
+                    ("tlm_ttft", o["t_first"], emitted),
+                    ("tlm_e2e", o["t_last"], st == _DONE)):
+                h = o[key_].astype(np.float64, copy=True)
+                np.add.at(h, np.searchsorted(edges, tmark[m] - t32[m]), 1.0)
+                o[key_] = h
+        telemetry = (extract_probes(o, self.telemetry, horizon=horizon,
+                                    n_servers=self._base.n)
+                     if self.telemetry is not None else None)
         return {
             "revenue_rate": float(o["rev"]) / horizon,
             "completion_rate": completions / arrivals if arrivals else 0.0,
@@ -392,4 +431,5 @@ class StreamingEngineJAX:
             "n_segments": n_segments,
             "window_peak": window_peak,
             "window_occupancy": occupancy,
+            **({"telemetry": telemetry} if telemetry is not None else {}),
         }

@@ -275,12 +275,20 @@ def _eval_ctmc(ctx: MixContext, token: str, n: int, *,
     policy = resolve_policy(token, ctx, n)
     spec = ctx.spec
     sim = CTMCSimulator(ctx.classes, ctx.prim, ctx.pricing, policy, n=n,
-                        seed=seeds[0], record_every=spec.record_every)
+                        seed=seeds[0], record_every=spec.record_every,
+                        telemetry=spec.extra.get("telemetry"))
     results = sim.run_batch(spec.horizon, warmup=spec.warmup, rngs=seeds)
     # judge each policy against its own planning targets (the SLI-aware
     # router plans with q_d pinned to zero, so its x*/y*/R* differ)
     plan = policy.plan if policy.plan is not None else ctx.plan("base")
-    return [_ctmc_metrics(r, plan) for r in results]
+    out = []
+    for r in results:
+        m = _ctmc_metrics(r, plan)
+        if r.telemetry is not None:
+            m["tlm_events"] = float(r.telemetry["events"].sum())
+            m["tlm_drops"] = float(r.telemetry["drops"].sum())
+        out.append(m)
+    return out
 
 
 def evaluate_ctmc_cells(ctx: MixContext, token: str, n: int,
@@ -341,6 +349,7 @@ def _eval_ctmc_jax(ctx: MixContext, token: str, n: int, *,
                          "trajectories; use evaluator='ctmc'")
     kw = dict(spec.extra.get("ctmc_jax", {}))
     x64 = bool(kw.pop("x64", False))
+    kw.setdefault("telemetry", spec.extra.get("telemetry"))
     policy = resolve_policy(token, ctx, n)
     with enable_x64() if x64 else contextlib.nullcontext():
         sim = UniformizedCTMC(ctx.classes, ctx.prim, ctx.pricing, policy,
@@ -357,6 +366,9 @@ def _eval_ctmc_jax(ctx: MixContext, token: str, n: int, *,
         m["t_end"] = float(res.t_end)
         m["clip_steps"] = float(clip[r])
         m["n_events"] = float(res.n_events)
+        if sim.telemetry is not None:
+            m["tlm_events"] = float(np.asarray(raw["tlm_ev"])[r].sum())
+            m["tlm_drops"] = float(np.asarray(raw["tlm_drop"])[r].sum())
         out.append(m)
     return out
 
@@ -606,7 +618,7 @@ def evaluate_trace_policy(token: str, trace, n: int, *,
                           horizon: float = 600.0, online: bool = True,
                           seed: int = 42, sli: Optional[SLISpec] = None,
                           safety: float = 3.0,
-                          classes=None, plan=None) -> dict:
+                          classes=None, plan=None, telemetry=None) -> dict:
     """One (policy, trace) evaluation in the calibrated per-server engine.
 
     This is the single implementation behind both the sweep's "engine"
@@ -626,6 +638,10 @@ def evaluate_trace_policy(token: str, trace, n: int, *,
     name, args = parse_policy_token(token)
     policy, cfg = engine_policy_and_cfg(token, plan, prim, pricing, n,
                                         seed=seed)
+    if telemetry is not None:
+        import dataclasses
+
+        cfg = dataclasses.replace(cfg, telemetry=telemetry)
     controller = None
     if name == "gate_and_route" and online:
         controller = OnlineController(
@@ -636,6 +652,10 @@ def evaluate_trace_policy(token: str, trace, n: int, *,
     out = m.summary()
     if name.startswith("distserve_"):
         out["distserve_k"] = _distserve_k(args, n)
+    if m.telemetry is not None:
+        out["tlm_events"] = float(m.telemetry["events"].sum())
+        out["tlm_drops"] = float(m.telemetry["drops"].sum())
+        out["tlm_ttft_p95"] = float(m.telemetry["ttft_p95"])
     return {k: float(v) for k, v in out.items()}
 
 
@@ -651,6 +671,7 @@ def _engine_cell(ctx: MixContext, token: str, n: int,
         safety=float(spec.extra.get("safety", 3.0)),
         classes=ctx.trace_classes(n),
         plan=ctx.trace_plan(n),
+        telemetry=spec.extra.get("telemetry"),
     )
 
 
@@ -708,16 +729,30 @@ def _eval_engine_jax(ctx: MixContext, token: str, n: int, *,
         raise ValueError("the engine_jax evaluator does not record "
                          "queue traces; use evaluator='engine'")
     kw = dict(spec.extra.get("engine_jax", {}))
+    if spec.extra.get("telemetry") is not None:
+        kw.setdefault("telemetry", spec.extra["telemetry"])
     policy, cfg = engine_policy_and_cfg(token, ctx.trace_plan(n), ctx.prim,
                                         ctx.pricing, n)
     eng = ClusterEngineJAX(ctx.trace_classes(n), policy, cfg, ctx.trace(n),
                            horizon=spec.horizon, **kw)
-    out = eng.run_batch([cell_int_seed(ss) for ss in seeds],
-                        placement=placement, shard=shard)
+    raw = eng.run_batch_raw([cell_int_seed(ss) for ss in seeds],
+                            placement=placement, shard=shard)
+    out = eng.summaries_from_raw(raw)
     name, args = parse_policy_token(token)
     if name.startswith("distserve_"):
         for m in out:
             m["distserve_k"] = _distserve_k(args, n)
+    if eng.telemetry is not None:
+        from repro.telemetry.probes import hist_edges, hist_percentile
+
+        edges = hist_edges(eng.telemetry)
+        ev = np.asarray(raw["tlm_ev"])
+        dr = np.asarray(raw["tlm_drop"])
+        tt = np.asarray(raw["tlm_ttft"])
+        for r, m in enumerate(out):
+            m["tlm_events"] = float(ev[r].sum())
+            m["tlm_drops"] = float(dr[r].sum())
+            m["tlm_ttft_p95"] = float(hist_percentile(tt[r], edges, 95))
     return [{k: float(v) for k, v in m.items()} for m in out]
 
 

@@ -196,6 +196,19 @@ def main(argv=None) -> int:
         Path("artifacts") / "sweep" / f"{spec.name}.json")
     result.save(out)
     print(f"[sweep:{spec.name}] wrote {out}")
+    record = result.meta.get("manifest")
+    if record is not None:
+        from repro.telemetry.manifest import (append_record, file_digest)
+
+        record = dict(record, artifacts={str(out): file_digest(out)})
+        # the repo-central log is for artifacts that live in the repo's
+        # artifacts/ tree; a sweep written elsewhere (smoke runs, /tmp)
+        # carries its manifest next to the artifact instead
+        central = Path("artifacts").resolve()
+        in_repo = out.resolve().is_relative_to(central)
+        mpath = append_record(record) if in_repo else append_record(
+            record, out.with_name(out.stem + ".runs.jsonl"))
+        print(f"[sweep:{spec.name}] manifest -> {mpath}")
     return 0
 
 

@@ -82,4 +82,19 @@ def run_sweep(spec: SweepSpec,
         meta["placement"] = placement
         if placement == "shard_map":
             meta["shard_devices"] = detected_devices()
+    # schema-versioned provenance record (RunRecord); riders like the
+    # sweep CLI append it to artifacts/manifests/runs.jsonl
+    import hashlib
+    import json
+
+    from repro.telemetry.manifest import run_record
+
+    spec_hash = hashlib.sha256(
+        json.dumps(spec.to_dict(), sort_keys=True,
+                   default=float).encode()).hexdigest()
+    meta["manifest"] = run_record(
+        kind="sweep", name=spec.name,
+        wall_s=meta["wall_seconds"],
+        extra={"evaluator": spec.evaluator, "n_cells": len(cells),
+               "placement": placement, "spec_sha256": spec_hash})
     return SweepResult(spec=spec, cells=cells, meta=meta)

@@ -1,0 +1,36 @@
+"""Shared wall-clock timing helper (warmup + median-of-reps).
+
+The single canonical implementation of ``timeit_median`` -- previously
+grown inside :mod:`repro.calibration.measure` and re-imported ad hoc by
+the benchmark suite.  It now lives in the telemetry layer (it *is* a
+measurement primitive) and is re-exported by
+:mod:`repro.calibration.measure` and :mod:`benchmarks.common` so every
+historical import path keeps working.
+"""
+
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Callable
+
+__all__ = ["timeit_median"]
+
+
+def timeit_median(fn: Callable[[], object], *, warmup: int = 2,
+                  reps: int = 5) -> float:
+    """Median-of-``reps`` wall time of ``fn()`` after ``warmup`` calls.
+
+    Replaces the old ``bench_calibration`` bare ``time.time`` reps=3
+    loop: ``perf_counter`` is monotonic and the median discards the
+    recompile/GC outliers that made the benchmark flaky.  The warmup
+    calls also discard jit compilation for JAX legs.
+    """
+    for _ in range(warmup):
+        fn()
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return statistics.median(times)

@@ -32,6 +32,7 @@ comparisons over the whole registry.
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Optional, Sequence
 
@@ -143,18 +144,35 @@ def run_closed_loop(scenario, variant: str = "adaptive",
                     cfg: ClosedLoopConfig = ClosedLoopConfig(),
                     prim: Optional[ServicePrimitives] = None,
                     pricing: Optional[Pricing] = None,
-                    trace=None, plans=None) -> dict:
+                    trace=None, plans=None, telemetry=None,
+                    trace_path=None, manifest_path=None) -> dict:
     """Replay one scenario under one variant; returns a flat metric dict.
 
     ``scenario`` is a :class:`Scenario` or a registered name.  Pass a
     pre-generated ``trace`` to share it across variants (what
     :func:`compare_policies` does -- common random numbers); ``plans``
     (a :func:`_plans` tuple for that trace) additionally skips the
-    per-variant LP re-solves, which depend only on trace + cfg."""
+    per-variant LP re-solves, which depend only on trace + cfg.
+
+    Observability riders (all default off; the metric dict is identical
+    when they stay off):
+
+    * ``telemetry`` -- a :class:`repro.telemetry.ProbeSpec` / ``True`` /
+      dict of overrides: threads time-binned probes through the engine
+      and adds ``tlm_events`` / ``tlm_drops`` / ``tlm_ttft_p95`` to the
+      returned metrics.
+    * ``trace_path`` -- write a Chrome-trace JSON of request lifecycles
+      plus replan/capacity instant events there (implies ``telemetry``).
+    * ``manifest_path`` -- append one ``closed_loop`` RunRecord to this
+      JSONL manifest (digesting the trace file when also written).
+    """
+    t_wall = time.time()
     if isinstance(scenario, str):
         scenario = get_scenario(scenario)
     if variant not in VARIANTS:
         raise ValueError(f"unknown variant {variant!r}; one of {VARIANTS}")
+    if trace_path is not None and telemetry is None:
+        telemetry = True  # lifecycle records need probes on
     prim = prim or ServicePrimitives()
     pricing = pricing or Pricing()
     n = cfg.n_servers
@@ -182,8 +200,25 @@ def run_closed_loop(scenario, variant: str = "adaptive",
     else:  # sarathi
         classes, policy = full_cls, baseline_sarathi(full_plan)
 
+    replan_log: list = []
+    if controller is not None and (trace_path is not None
+                                   or manifest_path is not None):
+        # the controller records a count but not epochs; intercept
+        # replan(t) to keep the timeline for the trace export
+        inner_replan = controller.replan
+
+        def _logged_replan(t: float):
+            plan = inner_replan(t)
+            replan_log.append((float(t), {
+                "epoch": len(replan_log) + 1, "n": controller.n,
+                "mixed_target": int(plan.mixed_servers(controller.n))}))
+            return plan
+
+        controller.replan = _logged_replan
+
     ecfg = EngineConfig(prim, pricing, n, seed=cfg.seed,
-                        sarathi_budget=(variant == "sarathi"))
+                        sarathi_budget=(variant == "sarathi"),
+                        telemetry=telemetry)
     eng = ClusterEngine(classes, policy, ecfg, controller=controller)
     m = eng.run(trace, horizon=horizon,
                 failure_events=scenario.failure_events(n),
@@ -195,6 +230,34 @@ def run_closed_loop(scenario, variant: str = "adaptive",
     out["mixed_target_final"] = float(
         controller.mixed_target() if controller
         else policy.mixed_target(n))
+    if m.telemetry is not None:
+        tl = m.telemetry
+        out["tlm_events"] = float(tl["events"].sum())
+        out["tlm_drops"] = float(tl["drops"].sum())
+        out["tlm_ttft_p95"] = float(tl["ttft_p95"])
+    artifacts = {}
+    if trace_path is not None:
+        from repro.telemetry.trace import (lifecycle_events, replan_events,
+                                           write_trace)
+
+        events = lifecycle_events(eng.lifecycle_records())
+        events += replan_events(replan_log)
+        p = write_trace(trace_path, events,
+                        source=f"closed_loop/{scenario.name}/{variant}")
+        artifacts[str(p)] = None
+    if manifest_path is not None:
+        from repro.telemetry.manifest import (append_record, file_digest,
+                                              run_record)
+
+        record = run_record(
+            kind="closed_loop", name=f"{scenario.name}/{variant}",
+            wall_s=time.time() - t_wall,
+            extra={"n": n, "horizon": horizon, "seed": cfg.seed,
+                   "n_requests": len(trace),
+                   "replans": float(out["replans"]),
+                   "telemetry": telemetry is not None},
+            artifacts={p: file_digest(p) for p in artifacts})
+        append_record(record, manifest_path)
     return {k: float(v) for k, v in out.items()}
 
 

@@ -26,6 +26,8 @@ Plus the registry regression riding along (every workload scenario
 replays its CI-size trace with ``budget_exhausted == 0``).
 """
 
+import re
+
 import numpy as np
 import pytest
 
@@ -287,14 +289,29 @@ class iter_chunks:
 
 
 def test_stream_window_overflow_is_loud():
-    """An undersized working set raises instead of dropping load."""
+    """An undersized working set raises instead of dropping load, and
+    the message carries the recent per-segment occupancy trace so the
+    operator can see the backlog build-up, not just the failing seam."""
     _, trace, classes, plan = _mk(seed=7, compression=0.3, horizon=30.0)
     se = StreamingEngineJAX(classes, POLICIES["vllm"](plan),
                             EngineConfig(PRIM, PRICE, n_servers=N),
                             horizon=30.0, window=16)
-    with pytest.raises(RuntimeError, match="window"):
+    with pytest.raises(RuntimeError, match="window") as exc:
         se.run_stream(TraceChunkSource(_strip_patience(trace),
                                        chunk_size=64), seed=0)
+    msg = str(exc.value)
+    assert "occupancy after recent splices" in msg, msg
+    # small chunks -> several splices before the overflow: the trace
+    # must list seg<idx>=<occupancy> entries, not the first-splice text
+    se2 = StreamingEngineJAX(classes, POLICIES["vllm"](plan),
+                             EngineConfig(PRIM, PRICE, n_servers=N),
+                             horizon=30.0, window=16)
+    with pytest.raises(RuntimeError,
+                       match=r"occupancy after recent splices: seg\d+=") \
+            as exc2:
+        se2.run_stream(TraceChunkSource(_strip_patience(trace),
+                                        chunk_size=8), seed=0)
+    assert re.search(r"seg\d+=\d+", str(exc2.value)), str(exc2.value)
 
 
 # --------------------------------------------- registry regression (tier-1)

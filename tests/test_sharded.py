@@ -125,6 +125,72 @@ def test_deprecated_shims_warn_and_agree():
     assert cells[0].metrics == legacy
 
 
+def test_get_evaluator_unknown_name_lists_known():
+    """The dispatch error must name every registered evaluator, so a
+    typo'd spec.evaluator is self-diagnosing."""
+    with pytest.raises(Exception, match="no evaluator registered") as exc:
+        get_evaluator("no_such_evaluator")
+    msg = str(exc.value)
+    for name in EVALUATORS:
+        assert name in msg, f"{name} missing from: {msg}"
+
+
+def test_all_deprecated_shims_warn_and_agree():
+    """Every legacy ``evaluate_*`` entry point must (a) emit a
+    DeprecationWarning pointing at ``get_evaluator`` and (b) return
+    results identical to the registered Evaluator it wraps."""
+    from repro.sweep.evaluators import (MixContext, evaluate_ctmc_cells,
+                                        evaluate_ctmc_jax_cells,
+                                        evaluate_engine_cell,
+                                        evaluate_engine_jax_cells,
+                                        evaluate_lp_cell,
+                                        evaluate_lp_jax_grid)
+    from repro.sweep.run import default_mix
+    from repro.sweep.spec import cell_seed_sequence
+
+    mix = default_mix("two_class")
+    spec = SweepSpec(name="t", evaluator="ctmc",
+                     policies=("gate_and_route",), n_servers=(4,),
+                     n_seeds=2, seed=7, mixes=(mix,),
+                     horizon=6.0, warmup=1.0)
+    n = 4
+    token = "gate_and_route"
+    streams = [cell_seed_sequence(spec, 0, 0, 0, s) for s in range(2)]
+
+    def fresh_ctx():
+        return MixContext(mix, spec)
+
+    # seed-replicated stochastic shims: (shim, registered name)
+    for shim, name in ((evaluate_ctmc_cells, "ctmc"),
+                       (evaluate_ctmc_jax_cells, "ctmc_jax"),
+                       (evaluate_engine_jax_cells, "engine_jax")):
+        with pytest.warns(DeprecationWarning, match="get_evaluator"):
+            legacy = shim(fresh_ctx(), token, n, streams)
+        cells = get_evaluator(name)(fresh_ctx(), token, n, seeds=streams)
+        assert len(legacy) == len(cells) == 2
+        for old, new in zip(legacy, cells):
+            assert dict(old) == new.metrics, name
+
+    # single-seed Python trace engine shim
+    with pytest.warns(DeprecationWarning, match="get_evaluator"):
+        legacy = evaluate_engine_cell(fresh_ctx(), token, n, streams[0])
+    (cell,) = get_evaluator("engine")(fresh_ctx(), token, n,
+                                      seeds=streams[:1])
+    assert dict(legacy) == cell.metrics
+
+    # deterministic planners: no seed axis
+    with pytest.warns(DeprecationWarning, match="get_evaluator"):
+        legacy = evaluate_lp_cell(fresh_ctx(), "lp")
+    (cell,) = get_evaluator("lp")(fresh_ctx(), "lp", n, seeds=[None])
+    assert legacy == cell.metrics
+
+    ctx = fresh_ctx()
+    with pytest.warns(DeprecationWarning, match="get_evaluator"):
+        grid = evaluate_lp_jax_grid([ctx], ["lp"])
+    (cell,) = get_evaluator("lp_jax")(fresh_ctx(), "lp", n, seeds=[None])
+    assert grid[(0, 0)] == cell.metrics
+
+
 def test_run_sweep_rejects_unknown_placement():
     from repro.sweep import run_sweep
     from repro.sweep.run import default_mix

@@ -180,6 +180,11 @@ def test_cli_smoke(tmp_path):
     assert main(["--smoke", "--out", str(out)]) == 0
     loaded = SweepResult.load(out)
     assert loaded.cells and "revenue_rate" in loaded.cells[0].metrics
+    # an out-of-repo artifact carries its manifest next to itself; the
+    # repo-central artifacts/manifests/runs.jsonl must stay untouched
+    from repro.telemetry.manifest import read_records
+    (rec,) = read_records(tmp_path / "smoke.runs.jsonl")
+    assert rec["kind"] == "sweep" and str(out) in rec["artifacts"]
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,421 @@
+"""Telemetry layer: probe math, the bitwise no-change contract across
+all five engines, the Chrome-trace exporter and the run manifests.
+
+The load-bearing guarantee is differential: every engine must produce
+**bitwise-identical** non-telemetry outputs with probes off and probes
+ON (the ``tlm_*`` carry keys are never read by summary paths), and
+``telemetry=None`` must add zero carry keys.  Unit tests pin the bin /
+forward-fill / histogram semantics shared by the device probes and
+their pure-Python twin (:class:`repro.telemetry.probes.PyProbes`).
+"""
+
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.planning import solve_bundled_lp
+from repro.core.policies import gate_and_route
+from repro.core.types import Pricing, ServicePrimitives, WorkloadClass
+from repro.data.traces import TraceConfig, synth_azure_trace
+from repro.telemetry.manifest import (MANIFEST_SCHEMA_VERSION, append_record,
+                                      file_digest, payload_digest,
+                                      read_records, run_record,
+                                      validate_record)
+from repro.telemetry.probes import (CTMC_PROBE_KEYS, PROBES, ProbeSpec,
+                                    PyProbes, extract_probes,
+                                    hist_attainment, hist_edges,
+                                    hist_percentile, resolve_probe_spec)
+from repro.telemetry.trace import (TRACE_SCHEMA_VERSION, lifecycle_events,
+                                   replan_events, trace_payload,
+                                   validate_trace, write_trace)
+
+PRIM = ServicePrimitives()
+PRICE = Pricing(0.1, 0.2)
+CLASSES = [WorkloadClass("chat", 512, 768, 0.2),
+           WorkloadClass("agent", 1024, 1024, 0.1)]
+N = 8
+HORIZON = 30.0
+
+
+@pytest.fixture(scope="module")
+def plan():
+    return solve_bundled_lp(CLASSES, PRIM, PRICE)
+
+
+@pytest.fixture(scope="module")
+def trace():
+    t = synth_azure_trace(TraceConfig(horizon=HORIZON, base_rate=1.5,
+                                      compression=0.3, seed=5))
+    for r in t:
+        r.patience = float("inf")
+    return t
+
+
+def _same(a, b):
+    """Bitwise-or-both-NaN scalar equality."""
+    fa, fb = float(a), float(b)
+    return fa == fb or (math.isnan(fa) and math.isnan(fb))
+
+
+# ---------------------------------------------------------------------------
+# ProbeSpec / resolve_probe_spec
+# ---------------------------------------------------------------------------
+
+
+def test_probe_spec_validation():
+    ProbeSpec(n_bins=1, n_hist=2)  # minimal legal spec
+    with pytest.raises(ValueError, match="n_bins"):
+        ProbeSpec(n_bins=0)
+    with pytest.raises(ValueError, match="n_bins"):
+        ProbeSpec(n_hist=1)
+    with pytest.raises(ValueError, match="hist_min"):
+        ProbeSpec(hist_min=0.0)
+    with pytest.raises(ValueError, match="hist_min"):
+        ProbeSpec(hist_min=2.0, hist_max=1.0)
+    # frozen + hashable: usable as a jit static
+    assert hash(ProbeSpec()) == hash(ProbeSpec())
+
+
+def test_resolve_probe_spec_coercions():
+    assert resolve_probe_spec(None) is None
+    assert resolve_probe_spec(False) is None
+    assert resolve_probe_spec(True) == ProbeSpec()
+    assert resolve_probe_spec({"n_bins": 8}) == ProbeSpec(n_bins=8)
+    spec = ProbeSpec(n_hist=16)
+    assert resolve_probe_spec(spec) is spec
+    with pytest.raises(TypeError, match="telemetry"):
+        resolve_probe_spec(42)
+
+
+def test_probe_registry_keys_are_prefixed():
+    for name, d in PROBES.items():
+        assert d.key.startswith("tlm_"), (name, d.key)
+    assert set(CTMC_PROBE_KEYS) <= {d.key for d in PROBES.values()}
+
+
+# ---------------------------------------------------------------------------
+# histogram math
+# ---------------------------------------------------------------------------
+
+
+def test_hist_percentile_and_attainment():
+    spec = ProbeSpec(n_hist=4, hist_min=1.0, hist_max=4.0)
+    edges = hist_edges(spec)  # 3 interior edges: 1, 2, 4
+    assert edges.shape == (3,)
+    np.testing.assert_allclose(edges, [1.0, 2.0, 4.0])
+    assert math.isnan(hist_percentile(np.zeros(4), edges, 95))
+    assert math.isnan(hist_attainment(np.zeros(4), edges, 1.0))
+    # all mass in one interior bucket -> percentile interpolates inside
+    h = np.array([0.0, 10.0, 0.0, 0.0])  # bucket [1, 2)
+    assert 1.0 <= hist_percentile(h, edges, 50) <= 2.0
+    assert hist_percentile(h, edges, 0.1) < hist_percentile(h, edges, 99)
+    # attainment is conservative: counts whole buckets by upper edge
+    h2 = np.array([5.0, 5.0, 0.0, 0.0])
+    assert hist_attainment(h2, edges, 2.0) == pytest.approx(1.0)
+    assert hist_attainment(h2, edges, 1.5) == pytest.approx(0.5)
+    assert hist_attainment(h2, edges, 0.5) == 0.0
+
+
+def test_extract_probes_ffill_and_batch_reduction():
+    spec = ProbeSpec(n_bins=4, n_hist=4, hist_min=1.0, hist_max=4.0)
+    nb = spec.n_bins
+
+    def rep(ev, q):
+        raw = {d.key: np.zeros(nb) for d in PROBES.values()}
+        raw["tlm_q"] = np.asarray(q, dtype=float)[:, None]
+        raw["tlm_adm"] = np.zeros((nb, 1))
+        raw["tlm_ev"] = np.asarray(ev, dtype=float)
+        raw["tlm_busy_srv"] = np.zeros(2)
+        raw["tlm_ttft"] = np.array([1.0, 0.0, 0.0, 0.0])
+        raw["tlm_e2e"] = np.array([0.0, 2.0, 0.0, 0.0])
+        return raw
+
+    # single replication: bin 2 saw no event -> forward-fill from bin 1
+    one = rep(ev=[1, 1, 0, 1], q=[3, 5, 0, 2])
+    out = extract_probes(one, spec, horizon=8.0, n_servers=2)
+    np.testing.assert_array_equal(out["queue_depth"][:, 0], [3, 5, 5, 2])
+    assert out["bin_width"] == 2.0
+    np.testing.assert_array_equal(out["t_bins"], [1, 3, 5, 7])
+    # batched: ffill per replication BEFORE averaging; counters sum
+    two = {k: np.stack([one[k], rep(ev=[1, 0, 0, 0], q=[1, 0, 0, 0])[k]])
+           for k in one}
+    out2 = extract_probes(two, spec, horizon=8.0, n_servers=2)
+    np.testing.assert_array_equal(out2["queue_depth"][:, 0],
+                                  [2, 3, 3, 1.5])
+    np.testing.assert_array_equal(out2["events"], [2, 1, 0, 1])
+    np.testing.assert_array_equal(out2["ttft_hist"],
+                                  2 * one["tlm_ttft"])
+    assert out2["ttft_p50"] <= 1.0  # all mass in the underflow bucket
+
+
+def test_extract_probes_rejects_bare_carry():
+    with pytest.raises(KeyError, match="telemetry"):
+        extract_probes({"t": np.zeros(3)}, ProbeSpec(), horizon=1.0,
+                       n_servers=1)
+
+
+def test_pyprobes_semantics():
+    spec = ProbeSpec(n_bins=4, n_hist=4, hist_min=1.0, hist_max=4.0)
+    p = PyProbes(spec, horizon=8.0, n_servers=2, n_classes=1)
+    p.sample(1.0, queue_depth=[2.0], decode_occupancy=3.0,
+             prefill_in_flight=1.0, busy=[True, False])
+    p.sample(3.0, queue_depth=[4.0], decode_occupancy=1.0,
+             prefill_in_flight=0.0, busy=[True, True])
+    p.count(3.0, admit_class=0, drops=2.0)
+    p.observe_ttft(1.5)   # bucket [1, 2)
+    p.observe_e2e(100.0)  # overflow bucket
+    raw = p.raw()
+    # last-value in bin 0 (t=1.0) and bin 1 (t=3.0)
+    np.testing.assert_array_equal(raw["tlm_q"][:, 0], [2, 4, 0, 0])
+    np.testing.assert_array_equal(raw["tlm_ev"], [1, 1, 0, 0])
+    np.testing.assert_array_equal(raw["tlm_adm"][:, 0], [0, 1, 0, 0])
+    np.testing.assert_array_equal(raw["tlm_drop"], [0, 2, 0, 0])
+    # busy integral: server 0 busy over [1, 3) -> 2s in bin 0 (t0's bin)
+    np.testing.assert_array_equal(raw["tlm_busy_srv"], [2.0, 0.0])
+    np.testing.assert_array_equal(raw["tlm_busy_bin"], [2, 0, 0, 0])
+    np.testing.assert_array_equal(raw["tlm_ttft"], [0, 1, 0, 0])
+    np.testing.assert_array_equal(raw["tlm_e2e"], [0, 0, 0, 1])
+    out = p.extract()  # renders through the same extractor
+    np.testing.assert_array_equal(out["queue_depth"][:, 0], [2, 4, 4, 4])
+
+
+# ---------------------------------------------------------------------------
+# bitwise no-change contract, engine by engine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.sim
+def test_engine_sim_bitwise_invariant(plan, trace):
+    from repro.serving.engine_sim import ClusterEngine, EngineConfig
+
+    def summary(tlm):
+        eng = ClusterEngine(CLASSES, gate_and_route(plan),
+                            EngineConfig(PRIM, PRICE, N, seed=3,
+                                         telemetry=tlm))
+        return eng.run(trace, horizon=HORIZON)
+
+    off, on = summary(None), summary(True)
+    assert off.telemetry is None
+    for k, v in off.summary().items():
+        assert _same(v, on.summary()[k]), k
+    tl = on.telemetry
+    assert tl["e2e_hist"].sum() == on.summary()["completions"]
+    assert tl["events"].sum() > 0
+
+
+@pytest.mark.sim
+def test_engine_jax_bitwise_invariant(plan, trace):
+    from repro.serving.engine_jax import ClusterEngineJAX
+    from repro.serving.engine_sim import EngineConfig
+
+    def raw(tlm):
+        eng = ClusterEngineJAX(CLASSES, gate_and_route(plan),
+                               EngineConfig(PRIM, PRICE, N), trace,
+                               horizon=HORIZON, fastforward=True,
+                               telemetry=tlm)
+        return eng, eng.run_raw(0)
+
+    eng_off, off = raw(None)
+    eng_on, on = raw(True)
+    # probes off adds ZERO carry keys; probes on adds exactly the tlm_*
+    extra = set(on) - set(off)
+    assert extra == {d.key for d in PROBES.values()}
+    for k in off:  # every shared output is bitwise identical
+        np.testing.assert_array_equal(np.asarray(off[k]),
+                                      np.asarray(on[k]), err_msg=k)
+    s = eng_on._summary({k: np.asarray(v) for k, v in on.items()})
+    tl = eng_on.telemetry_from_raw(on)
+    assert tl["e2e_hist"].sum() == s["completions"]
+    assert tl["events"].sum() == s["n_events"]
+    assert np.isfinite(tl["ttft_p95"])
+    # batched raw reduces: counters sum over the replication axis
+    braw = eng_on.run_batch_raw([0, 1], placement="vmap")
+    btl = eng_on.telemetry_from_raw(braw)
+    assert btl["events"].sum() >= tl["events"].sum()
+
+
+@pytest.mark.sim
+def test_engine_stream_bitwise_invariant(plan, trace):
+    from repro.serving.engine_stream import (StreamingEngineJAX,
+                                             TraceChunkSource)
+    from repro.serving.engine_sim import EngineConfig
+
+    def run(tlm):
+        eng = StreamingEngineJAX(CLASSES, gate_and_route(plan),
+                                 EngineConfig(PRIM, PRICE, N),
+                                 horizon=HORIZON, window=512,
+                                 telemetry=tlm)
+        return eng.run_stream(TraceChunkSource(trace, chunk_size=64),
+                              seed=0)
+
+    off, on = run(None), run(True)
+    assert "telemetry" not in off
+    for k, v in off.items():
+        if k == "window_occupancy":
+            assert v == on[k]
+        else:
+            assert _same(v, on[k]), k
+    tl = on["telemetry"]
+    # splice folds + residual fold observe each request exactly once
+    assert tl["e2e_hist"].sum() == off["completions"]
+    assert tl["ttft_hist"].sum() >= off["completions"]
+
+
+@pytest.mark.sim
+def test_ctmc_python_bitwise_invariant(plan):
+    from repro.core.simulator import CTMCSimulator
+
+    def result(tlm):
+        sim = CTMCSimulator(CLASSES, PRIM, PRICE, gate_and_route(plan),
+                            n=N, seed=11, telemetry=tlm)
+        return sim.run(20.0, warmup=2.0)
+
+    off, on = result(None), result(True)
+    assert off.telemetry is None and on.telemetry is not None
+    assert off.revenue == on.revenue
+    assert off.n_events == on.n_events
+    np.testing.assert_array_equal(off.completions, on.completions)
+    np.testing.assert_array_equal(off.avg_x, on.avg_x)
+    assert on.telemetry["events"].sum() > 0
+
+
+@pytest.mark.sim
+def test_ctmc_jax_bitwise_invariant(plan):
+    from repro.core.ctmc_jax import UniformizedCTMC
+
+    def raw(tlm):
+        sim = UniformizedCTMC(CLASSES, PRIM, PRICE, gate_and_route(plan),
+                              n=N, horizon=20.0, warmup=2.0,
+                              telemetry=tlm)
+        return sim, sim.run_batch_raw([0, 1], placement="vmap")
+
+    sim_off, off = raw(None)
+    sim_on, on = raw(True)
+    extra = set(on) - set(off)
+    assert extra == set(CTMC_PROBE_KEYS)  # aggregate subset only
+    for k in off:
+        np.testing.assert_array_equal(np.asarray(off[k]),
+                                      np.asarray(on[k]), err_msg=k)
+    tl = sim_on.telemetry_from_raw(on)
+    assert tl["events"].sum() > 0
+    assert "ttft_p95" not in tl  # no per-request identity in the CTMC
+
+
+# ---------------------------------------------------------------------------
+# trace-event exporter
+# ---------------------------------------------------------------------------
+
+
+def test_lifecycle_events_phases():
+    # Python-engine record: all three phase boundaries -> 3 spans
+    full = {"rid": 4, "cls": "chat", "t_arr": 1.0, "t_admit": 2.0,
+            "t_prefill_done": 3.0, "t_first": 3.5, "t_last": 6.0,
+            "state": "done"}
+    # JAX-engine record: arrival/first/last only -> merged wait+prefill
+    merged = {"rid": 5, "cls": "agent", "t_arr": 1.0, "t_first": 4.0,
+              "t_last": 4.0}
+    # still queued at horizon: no spans beyond nothing-finite
+    queued = {"rid": 6, "cls": "chat", "t_arr": 2.0,
+              "t_first": float("inf"), "t_last": float("-inf")}
+    evs = lifecycle_events([full, merged, queued])
+    names = [(e["name"], e["tid"]) for e in evs]
+    assert names == [("queue", 4), ("prefill", 4), ("decode", 4),
+                     ("wait+prefill", 5), ("decode", 5)]
+    q = evs[0]
+    assert q["ph"] == "X" and q["ts"] == 1e6 and q["dur"] == 1e6
+    assert q["args"]["state"] == "done"
+    assert all(e["pid"] == 1 for e in evs)
+
+
+def test_replan_events_and_payload_roundtrip(tmp_path):
+    evs = replan_events([1.5, (3.0, {"epoch": 2, "n": 8})])
+    assert [e["ph"] for e in evs] == ["i", "i"]
+    assert evs[1]["args"]["epoch"] == 2
+    assert all(e["pid"] == 2 for e in evs)
+    payload = trace_payload(evs, source="test")
+    assert payload["otherData"]["schema_version"] == TRACE_SCHEMA_VERSION
+    p = write_trace(tmp_path / "t.json", evs, source="test")
+    assert validate_trace(p) == []
+    assert validate_trace(json.loads(p.read_text())) == []
+
+
+def test_validate_trace_catches_malformed():
+    assert validate_trace([]) != []
+    assert validate_trace({"nope": 1}) != []
+    bad_ph = {"traceEvents": [{"name": "x", "ph": "Z", "pid": 1,
+                               "tid": 0}]}
+    assert any("ph" in e for e in validate_trace(bad_ph))
+    bad_ts = {"traceEvents": [{"name": "x", "ph": "i", "pid": 1, "tid": 0,
+                               "ts": float("nan")}]}
+    assert any("ts" in e for e in validate_trace(bad_ts))
+    bad_dur = {"traceEvents": [{"name": "x", "ph": "X", "pid": 1,
+                                "tid": 0, "ts": 0.0, "dur": -1.0}]}
+    assert any("dur" in e for e in validate_trace(bad_dur))
+    bad_pid = {"traceEvents": [{"name": "decode", "ph": "X", "pid": 7,
+                                "tid": 0, "ts": 0.0, "dur": 1.0}]}
+    assert any("pid" in e for e in validate_trace(bad_pid))
+    future = {"traceEvents": [],
+              "otherData": {"schema_version": TRACE_SCHEMA_VERSION + 1}}
+    assert any("schema_version" in e for e in validate_trace(future))
+
+
+@pytest.mark.sim
+def test_engine_lifecycle_records_render(plan, trace):
+    from repro.serving.engine_sim import ClusterEngine, EngineConfig
+
+    eng = ClusterEngine(CLASSES, gate_and_route(plan),
+                        EngineConfig(PRIM, PRICE, N, seed=3,
+                                     telemetry=True))
+    eng.run(trace, horizon=HORIZON)
+    evs = lifecycle_events(eng.lifecycle_records(limit=50))
+    assert evs and validate_trace({"traceEvents": evs}) == []
+    assert {"queue", "prefill", "decode"} <= {e["name"] for e in evs}
+    # a probes-off engine refuses: records need the telemetry run
+    bare = ClusterEngine(CLASSES, gate_and_route(plan),
+                         EngineConfig(PRIM, PRICE, N, seed=3))
+    bare.run(trace, horizon=HORIZON)
+    with pytest.raises(ValueError, match="telemetry"):
+        bare.lifecycle_records()
+
+
+# ---------------------------------------------------------------------------
+# run manifests
+# ---------------------------------------------------------------------------
+
+
+def test_run_record_roundtrip(tmp_path):
+    art = tmp_path / "out.json"
+    art.write_text('{"x": 1}')
+    rec = run_record(kind="bench", name="t", wall_s=1.25,
+                     extra={"mode": "quick"},
+                     artifacts={str(art): file_digest(art)})
+    assert rec["schema_version"] == MANIFEST_SCHEMA_VERSION
+    assert validate_record(rec) == []
+    mpath = append_record(rec, tmp_path / "runs.jsonl")
+    assert append_record(rec, mpath) == mpath  # JSONL appends
+    loaded = list(read_records(mpath))
+    assert len(loaded) == 2 and loaded[0] == rec
+
+
+def test_validate_record_rejects_malformed():
+    assert validate_record({}) != []
+    assert validate_record({"schema_version": 1}) != []
+    rec = run_record(kind="bench", name="t")
+    bad = dict(rec, kind="banana")
+    assert any("kind" in e for e in validate_record(bad))
+    bad = dict(rec, schema_version=MANIFEST_SCHEMA_VERSION + 1)
+    assert any("schema_version" in e for e in validate_record(bad))
+    bad = dict(rec, wall_s="fast")
+    assert any("wall_s" in e for e in validate_record(bad))
+    with pytest.raises(ValueError):
+        append_record(dict(rec, kind="banana"), "/tmp/never-written.jsonl")
+
+
+def test_payload_digest_excludes_manifest_key():
+    payload = {"a": 1, "b": [1.0, 2.0]}
+    d = payload_digest(payload)
+    assert d == payload_digest(dict(payload))  # stable
+    assert d == payload_digest({**payload, "manifest": {"kind": "bench"}})
+    assert d != payload_digest({**payload, "a": 2})

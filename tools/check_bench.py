@@ -13,10 +13,15 @@ on-disk set outside a work tree):
 3. the JSON parses to an object carrying every ``required`` key;
 4. wherever a ``budget_exhausted`` key appears (any nesting level), its
    value is 0 -- a committed artifact produced by a truncated
-   fixed-budget simulation is a lie about the simulated horizon.
+   fixed-budget simulation is a lie about the simulated horizon;
+5. the artifact embeds a valid ``manifest`` RunRecord
+   (:mod:`repro.telemetry.manifest`) whose recorded payload digest
+   matches the payload -- provenance, not decoration: a regenerated
+   table without a manifest (or with a stale digest) fails.
 
 Run from the repo root; CI runs this in the ``bench-smoke`` job right
-after regenerating the smoke-size artifacts.  No third-party imports.
+after regenerating the smoke-size artifacts.  No third-party imports
+(``repro.telemetry.manifest`` is stdlib-only and imported from src/).
 """
 
 from __future__ import annotations
@@ -26,6 +31,11 @@ import re
 import subprocess
 import sys
 from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+from repro.telemetry.manifest import (payload_digest,  # noqa: E402
+                                      validate_record)
 
 # artifact stem -> producing bench module + keys the suite relies on.
 # ``committed`` artifacts are tracked in git and must exist.
@@ -47,7 +57,10 @@ ARTIFACTS = {
                          required=["speedup", "iters_per_sec_jax",
                                    "iters_per_sec_python",
                                    "events_per_sec_legacy",
-                                   "events_per_sec_hot", "speedup_hot",
+                                   "events_per_sec_hot",
+                                   "events_per_sec_hot_telemetry",
+                                   "telemetry_overhead_pct",
+                                   "speedup_hot",
                                    "stream", "mode",
                                    "budget_exhausted"]),
     "frontier": dict(bench="bench_frontier", required=[]),
@@ -134,6 +147,32 @@ def check_engine_speed(payload: dict) -> list:
                 f"stream.requests = {req!r} < {req_floor} "
                 f"({payload.get('mode')} mode): the streamed replay no "
                 f"longer demonstrates the beyond-memory-ceiling run")
+    ovh = payload.get("telemetry_overhead_pct")
+    if isinstance(ovh, (int, float)) and ovh >= 10.0:
+        errors.append(
+            f"telemetry_overhead_pct = {ovh:.1f} >= 10: probes-on hot "
+            f"leg regressed past the docs/OBSERVABILITY.md overhead "
+            f"contract")
+    return errors
+
+
+def check_manifest(payload: dict) -> list:
+    """The embedded provenance record must validate and its recorded
+    payload digest must match the payload (minus the record itself)."""
+    record = payload.get("manifest")
+    if record is None:
+        return ["missing 'manifest' RunRecord -- regenerate via "
+                "benchmarks.common.save() (repro.telemetry.manifest)"]
+    errors = [f"manifest: {e}" for e in validate_record(record)]
+    if errors:
+        return errors
+    want = (record.get("extra") or {}).get("payload_digest")
+    if not want:
+        errors.append("manifest.extra.payload_digest missing")
+    elif want != payload_digest(payload):
+        errors.append(
+            f"manifest.extra.payload_digest = {want[:12]}... does not "
+            f"match the payload (stale or hand-edited artifact)")
     return errors
 
 
@@ -212,6 +251,7 @@ def check(root: Path) -> list:
         for key in meta["required"]:
             if key not in payload:
                 errors.append(f"{rel}: missing required key {key!r}")
+        errors.extend(f"{rel}: {e}" for e in check_manifest(payload))
         if stem == "engine_speed":
             errors.extend(f"{rel}: {e}" for e in check_engine_speed(payload))
         if stem == "optimality_gap":

@@ -27,8 +27,8 @@ from pathlib import Path
 
 DOCS = ("README.md", "docs/ARCHITECTURE.md", "docs/SIMULATORS.md",
         "docs/WORKLOADS.md", "docs/PLANNING.md", "docs/CALIBRATION.md",
-        "docs/SHARDING.md", "benchmarks/README.md", "ROADMAP.md",
-        "CHANGES.md")
+        "docs/SHARDING.md", "docs/OBSERVABILITY.md",
+        "benchmarks/README.md", "ROADMAP.md", "CHANGES.md")
 
 LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
 
@@ -207,6 +207,73 @@ def check_model_catalog(root: Path, registry) -> list:
         f"is not documented in the catalog"
         for name in sorted(registry - ticked)
     ]
+
+
+# how docs name telemetry probes (backticked prose plus tlm_ carry
+# keys) -- same idea as the evaluator/scenario patterns
+PROBE_RES = (
+    re.compile(r"`([a-z0-9_]+)` probe\b"),
+    re.compile(r"probes? `([a-z0-9_]+)`"),
+)
+PROBE_KEY_RE = re.compile(r"`(tlm_[a-z0-9_]+)`")
+
+
+def known_probes(root: Path):
+    """The telemetry probe registry (name -> carry key), or an error."""
+    sys.path.insert(0, str(root / "src"))
+    try:
+        from repro.telemetry.probes import DERIVED_METRICS, PROBES
+        return ({name: d.key for name, d in PROBES.items()},
+                set(DERIVED_METRICS), None)
+    except Exception as exc:  # missing dep / broken import = check error
+        return None, None, f"cannot import repro.telemetry.probes ({exc})"
+
+
+def mentioned_probes(md: str):
+    names = set()
+    for rx in PROBE_RES:
+        for m in rx.finditer(md):
+            names.update(p for p in m.group(1).split(",") if p)
+    return names
+
+
+def check_probe_catalog(root: Path, registry, derived) -> list:
+    """Both directions against the telemetry registry: every probe /
+    ``tlm_`` carry key a doc mentions must be registered (carry key or
+    derived cell metric), and every registered probe (name AND carry
+    key) must appear in docs/OBSERVABILITY.md's catalog."""
+    if registry is None:
+        return []
+    errors = []
+    keys = set(registry.values()) | set(derived or ())
+    for rel in DOCS:
+        doc = root / rel
+        if not doc.exists():
+            continue
+        md = doc.read_text()
+        for name in sorted(mentioned_probes(md) - set(registry)):
+            errors.append(
+                f"{rel}: probe {name!r} not in the "
+                f"repro.telemetry.probes registry {sorted(registry)}")
+        for key in sorted(set(PROBE_KEY_RE.findall(md)) - keys):
+            errors.append(
+                f"{rel}: probe carry key {key!r} not in the "
+                f"repro.telemetry.probes registry {sorted(keys)}")
+    obs = root / "docs" / "OBSERVABILITY.md"
+    if not obs.exists():
+        return ["docs/OBSERVABILITY.md: missing (the probe catalog must "
+                "be documented there)"]
+    ticked = set(re.findall(r"`([a-z0-9_]+)`", obs.read_text()))
+    for name, key in sorted(registry.items()):
+        if name not in ticked:
+            errors.append(
+                f"docs/OBSERVABILITY.md: registered probe {name!r} is "
+                f"not documented in the catalog")
+        if key not in ticked:
+            errors.append(
+                f"docs/OBSERVABILITY.md: carry key {key!r} (probe "
+                f"{name!r}) is not documented in the catalog")
+    return errors
 
 
 # how docs name serving-engine modules (module paths only -- a bare
@@ -390,10 +457,14 @@ def check(root: Path) -> list:
                 errors.append(
                     f"{rel}: iteration-time model {name!r} not in the "
                     f"repro.calibration registry {sorted(models)}")
+    probes, derived, prb_err = known_probes(root)
+    if prb_err:
+        errors.append(f"probe registry: {prb_err}")
     errors.extend(check_placement_catalog(root, placements))
     errors.extend(check_scenario_catalog(root, scenarios))
     errors.extend(check_model_catalog(root, models))
     errors.extend(check_evaluator_catalog(root, registry))
+    errors.extend(check_probe_catalog(root, probes, derived))
     errors.extend(check_benchmarks(root))
     errors.extend(check_engine_catalog(root))
     return errors
