@@ -13,10 +13,10 @@ import traceback
 
 from . import (bench_ablations, bench_calibration, bench_charging,
                bench_classes, bench_convergence, bench_ctmc_speed,
-               bench_engine_speed, bench_frontier, bench_matched,
-               bench_optimality_gap, bench_roofline, bench_scale_sweep,
-               bench_scenarios, bench_sensitivity, bench_sli_pareto,
-               bench_trace_replay)
+               bench_engine_speed, bench_frontier, bench_heterogeneity,
+               bench_matched, bench_optimality_gap, bench_roofline,
+               bench_scale_sweep, bench_scenarios, bench_sensitivity,
+               bench_sli_pareto, bench_trace_replay)
 from .common import ART
 
 
@@ -49,6 +49,7 @@ SUITE = [
     ("scenarios", bench_scenarios),            # workload registry closed loop
     ("convergence", bench_convergence),        # EC.8.5
     ("optimality_gap", bench_optimality_gap),  # Theorems 2-3 vanishing gap
+    ("heterogeneity", bench_heterogeneity),    # mixed-fleet class-aware study
     ("ctmc_speed", bench_ctmc_speed),          # uniformized engine micro-bench
     ("engine_speed", bench_engine_speed),      # trace-replay engine micro-bench
     ("ablations", bench_ablations),            # EC.8.6

@@ -55,19 +55,43 @@ if _shard_map_impl is not None:
     _SHARD_CHECK_KW = ("check_vma" if "check_vma" in _params
                        else "check_rep" if "check_rep" in _params else None)
 
-_shard_fallback_warned = False
+# Process-wide once-per-kind warning guard.  The shard_map shim here and
+# ``run_sharded`` both detect the same condition (a "sharded" run that is
+# actually serial on a 1-device mesh) from different layers, so without a
+# shared guard a single sweep warns once per layer per process.  Each
+# distinct ``kind`` fires at most once; tests reset via ``reset_warn_once``.
+_warned_once: set = set()
+
+
+def warn_once(kind: str, message: str, *, stacklevel: int = 3) -> bool:
+    """Emit ``message`` as a RuntimeWarning the first time ``kind`` is seen.
+
+    Returns True if the warning fired, False if ``kind`` already warned
+    in this process.
+    """
+    if kind in _warned_once:
+        return False
+    _warned_once.add(kind)
+    warnings.warn(message, RuntimeWarning, stacklevel=stacklevel + 1)
+    return True
+
+
+def reset_warn_once(kind: str | None = None) -> None:
+    """Re-arm the once-per-kind guard (all kinds when ``kind`` is None)."""
+    if kind is None:
+        _warned_once.clear()
+    else:
+        _warned_once.discard(kind)
 
 
 def _warn_shard_fallback() -> None:
     """One-time, loud: a "sharded" run on this jax is actually serial."""
-    global _shard_fallback_warned
-    if not _shard_fallback_warned:
-        _shard_fallback_warned = True
-        warnings.warn(
-            f"this jax has no shard_map; emulating on a 1-device mesh "
-            f"({jax.device_count()} device(s) detected) -- the run computes "
-            f"the same values but is NOT partitioned across devices",
-            RuntimeWarning, stacklevel=3)
+    warn_once(
+        "shard-serial",
+        f"this jax has no shard_map; emulating on a 1-device mesh "
+        f"({jax.device_count()} device(s) detected) -- the run computes "
+        f"the same values but is NOT partitioned across devices",
+        stacklevel=4)
 
 
 def shard_map(f, *, mesh, in_specs, out_specs, check=None):

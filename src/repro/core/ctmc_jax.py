@@ -131,7 +131,8 @@ def _categorical(u, weights):
 
 def uniformization_bound(classes: Sequence[WorkloadClass],
                          prim: ServicePrimitives, policy: PolicySpec,
-                         n: int, cap_margin: float = 6.0) -> dict:
+                         n: int, cap_margin: float = 6.0,
+                         kv_xfer: float = 0.0) -> dict:
     """Static rate bound + abandonment caps for one instance.
 
     Returns ``{"Lambda", "M", "cap_m", "cap_s", "qp_cap", "qd_cap"}`` as
@@ -139,7 +140,7 @@ def uniformization_bound(classes: Sequence[WorkloadClass],
     where ``theta_i == 0`` -- a zero rate needs no cap).
     """
     prim = resolve_primitives(prim)
-    arr = rate_arrays(classes, prim)
+    arr = rate_arrays(classes, prim, kv_xfer)
     lam_tot = n * arr["lam"]
     theta = arr["theta"]
     M = policy.mixed_target(n)
@@ -427,7 +428,8 @@ class UniformizedCTMC:
                  policy: PolicySpec, n: int, horizon: float,
                  warmup: float = 0.0, *, stepping: str = "events",
                  cap_margin: float = 6.0, steps_margin: float = 6.0,
-                 n_steps: int | None = None, telemetry=None):
+                 n_steps: int | None = None, telemetry=None,
+                 kv_xfer: float = 0.0):
         self.classes = tuple(classes)
         self.policy = policy
         self.n = int(n)
@@ -439,9 +441,13 @@ class UniformizedCTMC:
             raise ValueError(f"stepping must be events|ticks, got {stepping!r}")
         self.stepping = stepping
 
-        arr = rate_arrays(self.classes, prim)
+        # KV-transfer charge (seconds per prompt token): folds into the
+        # aggregate prefill service rate mu_p; the 0.0 default takes the
+        # legacy expression in rates_for, keeping existing runs bitwise
+        arr = rate_arrays(self.classes, prim, kv_xfer)
         bound = uniformization_bound(self.classes, prim, policy, self.n,
-                                     cap_margin=cap_margin)
+                                     cap_margin=cap_margin,
+                                     kv_xfer=kv_xfer)
         self.Lambda = bound["Lambda"]
         self.M = int(bound["M"])
         if n_steps is not None:

@@ -116,11 +116,28 @@ def resolve_primitives(prim) -> ServicePrimitives:
         f".primitives() method, got {type(prim).__name__}")
 
 
-def rates_for(cls: WorkloadClass, prim: ServicePrimitives) -> ClassRates:
+def rates_for(cls: WorkloadClass, prim: ServicePrimitives,
+              kv_xfer: float = 0.0) -> ClassRates:
+    """Per-class service rates (Eq. 4), optionally transfer-adjusted.
+
+    ``kv_xfer`` is the KV handoff charge in seconds per prompt token
+    (KV bytes/token over link bandwidth; see docs/HETEROGENEITY.md): a
+    finishing prefill additionally occupies its server for
+    ``kv_xfer * P_i`` seconds while the cache ships to the decode pool,
+    so the effective prefill service time is ``P_i tau / chunk +
+    kv_xfer * P_i``.  The ``kv_xfer == 0`` branch is taken in Python so
+    the legacy expression (and its bitwise value) is untouched for
+    every existing homogeneous caller.
+    """
     prim = resolve_primitives(prim)
     tau = prim.tau_mix
+    if kv_xfer == 0.0:
+        mu_p = prim.chunk / (cls.prompt_len * tau)
+    else:
+        mu_p = 1.0 / (cls.prompt_len * tau / prim.chunk
+                      + kv_xfer * cls.prompt_len)
     return ClassRates(
-        mu_p=prim.chunk / (cls.prompt_len * tau),
+        mu_p=mu_p,
         mu_m=1.0 / (cls.decode_len * tau),
         mu_s=prim.gamma / cls.decode_len,
     )
@@ -147,11 +164,12 @@ DEFAULT_PRIMITIVES = ServicePrimitives()
 
 
 def rate_arrays(
-    classes: Sequence[WorkloadClass], prim: ServicePrimitives
+    classes: Sequence[WorkloadClass], prim: ServicePrimitives,
+    kv_xfer: float = 0.0,
 ) -> dict[str, np.ndarray]:
     """Vectorised per-class parameter arrays used by the LP/fluid/simulator."""
     prim = resolve_primitives(prim)
-    rr = [rates_for(c, prim) for c in classes]
+    rr = [rates_for(c, prim, kv_xfer) for c in classes]
     return {
         "lam": np.array([c.arrival_rate for c in classes], dtype=np.float64),
         "theta": np.array([c.patience for c in classes], dtype=np.float64),

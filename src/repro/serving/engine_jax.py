@@ -208,6 +208,13 @@ def iteration_budget(tt: TraceTensors, cfg: EngineConfig, h_eff: float,
         if hasattr(m, "knots"):
             kn = m.knots()
             tau_min = min(min(kn["mix_y"]), min(kn["solo_y"]))
+    elif cfg.fleet is not None:
+        # fastest class lower-bounds every server's iteration time (the
+        # KV-transfer charge only ever adds time, so it never loosens
+        # this bound)
+        fp = cfg.fleet.server_params(prim)
+        tau_min = float(min((fp["alpha"] + fp["beta"]).min(),
+                            fp["tau_solo"].min()))
     else:
         tau_min = min(prim.alpha + prim.beta, prim.tau_solo)
     clock = cfg.n_servers * (h_eff / tau_min + 1.0)
@@ -331,6 +338,13 @@ def _build_step(params: dict, key, *, n: int, B: int, gate_kind: str,
             tau = jnp.where(has_pf & (chn > 0),
                             params["alpha"] + params["beta"] * chn,
                             params["tau_solo"] + params["b_s"] * kv)
+        # KV-transfer charge: the chunk that FINISHES a prefill ships the
+        # whole KV cache to the decode pool and occupies the server for
+        # kv_xfer * P extra seconds (DistServe-style handoff).  kv_xfer
+        # is 0.0 without a fleet, so this adds an exact + 0.0 and the
+        # homogeneous hot path stays bitwise-clean.
+        fin = has_pf & (chn > 0.0) & (chn >= pl)
+        tau = tau + f(fin) * (params["kv_xfer"] * P[pfr])
         c["chunk"] = jnp.where(do, chn, c["chunk"])
         c["t_next"] = jnp.where(do, now + tau, c["t_next"])
         c["busy"] = c["busy"] | do
@@ -443,11 +457,15 @@ def _build_step(params: dict, key, *, n: int, B: int, gate_kind: str,
             # them); the segment loop stops there, ffwd must too
             t_cap = jnp.minimum(t_cap, params["frontier"])
         jj = jnp.arange(_FFWD_JMAX, dtype=dtype)[None, :]
+        # (n,)-shaped surfaces (heterogeneous fleets) need the explicit
+        # column axis; the scalar path emits the identical expressions
+        a_sB = a_s[:, None] if jnp.ndim(a_s) else a_s
+        b_sB = b_s[:, None] if jnp.ndim(b_s) else b_s
         Tj = (t0[:, None]
               + jnp.where(has_pf[:, None], jj * tau_pf[:, None],
-                          jj * a_s + b_s * (jj * kv0[:, None]
-                                            + L[:, None] * jj
-                                            * (jj - 1.0) / 2.0)))
+                          jj * a_sB + b_sB * (jj * kv0[:, None]
+                                              + L[:, None] * jj
+                                              * (jj - 1.0) / 2.0)))
         # batchable boundaries: strictly before every interaction and
         # the next arrival (arrival-first tie-break preserved), at or
         # before the horizon (events at h_eff are processed), strictly
@@ -462,6 +480,11 @@ def _build_step(params: dict, key, *, n: int, B: int, gate_kind: str,
             else jnp.minimum(pl2, params["C"]))
         tau2 = jnp.where(has_pf, params["alpha"] + params["beta"] * chn2,
                          a_s + b_s * (kv0 + j_s * L))
+        # finishing-chunk KV-transfer charge, mirroring wake exactly
+        # (window boundaries jj < jint <= jF are never finishing chunks,
+        # so only the post-window iteration can carry the charge)
+        fin2 = has_pf & (chn2 > 0.0) & (chn2 >= pl2)
+        tau2 = tau2 + f(fin2) * (params["kv_xfer"] * P[rc(c["pf_rid"])])
         t_last_b = T(j_s - 1.0)  # last batched boundary time
         c["t_next"] = jnp.where(adv, t_last_b + tau2, c["t_next"])
         c["pf_left"] = jnp.where(adv & has_pf, pl2, c["pf_left"])
@@ -1275,6 +1298,7 @@ class ClusterEngineJAX:
             "beta": a(prim.beta),
             "tau_solo": a(prim.tau_solo),
             "b_s": a(cfg.solo_kv_slope),
+            "kv_xfer": a(0.0),
             "B": a(prim.batch_cap),
             "C": a(prim.chunk),
             "Mi": jnp.asarray(self.M, jnp.int32),
@@ -1301,6 +1325,22 @@ class ClusterEngineJAX:
                 self.params["beta"] = a(m.tau_mix(1.0) - m.tau_mix(0.0))
                 self.params["tau_solo"] = a(m.tau_solo(0.0))
                 self.params["b_s"] = a(m.tau_solo(1.0) - m.tau_solo(0.0))
+        if cfg.fleet is not None:
+            # heterogeneous fleet: the four time surfaces plus the
+            # KV-transfer charge become (n,) per-server arrays (B/chunk
+            # stay fleet-uniform -- the pointer tables assume one B).
+            # The homogeneous path above keeps scalars, so its compiled
+            # HLO is byte-identical to the pre-fleet engine.
+            if m is not None:
+                raise ValueError("EngineConfig.fleet and iter_model are "
+                                 "mutually exclusive")
+            if int(cfg.fleet.n) != self.n:
+                raise ValueError(
+                    f"fleet has {int(cfg.fleet.n)} servers but "
+                    f"n_servers={self.n}")
+            fp = cfg.fleet.server_params(prim)
+            for k_ in ("alpha", "beta", "tau_solo", "b_s", "kv_xfer"):
+                self.params[k_] = a(fp[k_])
         self._static = dict(
             n_steps=self.n_steps, n=self.n, B=int(prim.batch_cap),
             gate_kind=self.gate_kind, router_kind=self.router_kind,

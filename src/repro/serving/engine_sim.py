@@ -58,6 +58,12 @@ class EngineConfig:
     # mirrors the device tlm_* arrays and ``metrics.telemetry`` /
     # ``lifecycle_records()`` are populated after ``run``.
     telemetry: Optional[object] = None
+    # Optional heterogeneous fleet (repro.core.hetero.FleetSpec).  None
+    # keeps every server on (prim, solo_kv_slope) with zero KV-transfer
+    # cost; when set, each server gets its class's time surfaces and KV
+    # handoff charge (fleet.n must equal n_servers; B/chunk stay
+    # fleet-uniform from ``prim``).  Mutually exclusive with iter_model.
+    fleet: Optional[object] = None
 
 
 @dataclass
@@ -86,6 +92,16 @@ class _Server:
     busy: bool = False  # an iteration is in flight
     iter_decodes: list = field(default_factory=list)  # snapshot at wake
     iter_chunk: int = 0
+    # per-server time surfaces (class-resolved under EngineConfig.fleet;
+    # copies of the uniform cfg values otherwise)
+    alpha: float = 0.0
+    beta: float = 0.0
+    tau_solo: float = 0.0
+    b_s: float = 0.0
+    kv_xfer: float = 0.0  # KV handoff seconds per prompt token
+    # link bandwidth fraction: 1.0 nominal, < 1 degraded (the "degrade"
+    # capacity event); the handoff charge divides by it
+    link_scale: float = 1.0
 
     def kv_tokens(self) -> int:
         k = sum(j.req.prompt_len + j.tokens_out for j in self.decodes)
@@ -185,6 +201,26 @@ class ClusterEngine:
                     "mixed" if s < M else "solo")
             for s in range(n)
         ]
+        if cfg.fleet is not None:
+            if cfg.iter_model is not None:
+                raise ValueError("EngineConfig.fleet and iter_model are "
+                                 "mutually exclusive")
+            if cfg.fleet.n != n:
+                raise ValueError(
+                    f"fleet has {cfg.fleet.n} servers but n_servers={n}")
+            fp = cfg.fleet.server_params(cfg.prim)
+            for s, srv in enumerate(self.servers):
+                srv.alpha = float(fp["alpha"][s])
+                srv.beta = float(fp["beta"][s])
+                srv.tau_solo = float(fp["tau_solo"][s])
+                srv.b_s = float(fp["b_s"][s])
+                srv.kv_xfer = float(fp["kv_xfer"][s])
+        else:
+            for srv in self.servers:
+                srv.alpha = cfg.prim.alpha
+                srv.beta = cfg.prim.beta
+                srv.tau_solo = cfg.prim.tau_solo
+                srv.b_s = cfg.solo_kv_slope
         self.prefill_q: list[deque] = [deque() for _ in range(self.I)]
         self.decode_buf: deque = deque()  # FCFS (single logical buffer)
         self.decode_buf_solo: deque = deque()  # randomized-router pools
@@ -376,11 +412,17 @@ class ClusterEngine:
             if srv.prefill is not None and srv.iter_chunk > 0:
                 return m.tau_mix(srv.iter_chunk) * srv.speed
             return m.tau_solo(srv.kv_tokens()) * srv.speed
-        prim = self.prim
         if srv.prefill is not None and srv.iter_chunk > 0:
-            return (prim.alpha + prim.beta * srv.iter_chunk) * srv.speed
+            t = (srv.alpha + srv.beta * srv.iter_chunk) * srv.speed
+            if srv.kv_xfer > 0.0 and srv.iter_chunk >= srv.prefill.prefill_left:
+                # finishing chunk: the KV cache ships to the decode pool
+                # and occupies the server for bytes-over-bandwidth seconds
+                # (link time -- NOT scaled by compute speed, but divided
+                # by the link's current bandwidth fraction).
+                t += (srv.kv_xfer / srv.link_scale) * srv.prefill.req.prompt_len
+            return t
         k = srv.kv_tokens()
-        return (prim.tau_solo + self.cfg.solo_kv_slope * k) * srv.speed
+        return (srv.tau_solo + srv.b_s * k) * srv.speed
 
     def _chunk_for(self, srv: _Server) -> int:
         left = srv.prefill.prefill_left
@@ -523,13 +565,35 @@ class ClusterEngine:
     def set_straggler(self, sid: int, speed: float) -> None:
         self.servers[sid].speed = speed
 
+    def set_link(self, sid: int, scale: float) -> None:
+        """Degrade/restore one server's KV handoff link (capacity
+        "degrade" event): ``scale`` is the remaining bandwidth fraction
+        (1.0 restores nominal).  Unlike fail/recover the server count is
+        unchanged, so the controller replans directly -- transfer-adjusted
+        service rates shift even though capacity does not."""
+        if scale <= 0 or not np.isfinite(scale):
+            raise ValueError(f"link scale must be positive, got {scale}")
+        self.servers[sid].link_scale = float(scale)
+        if self.controller is not None:
+            self._publish_plan(self.controller.replan(self._now))
+
+    def _publish_plan(self, plan) -> None:
+        """Push a fresh controller plan into the live policy (shared by
+        the periodic control epoch and the degrade hook)."""
+        gate = self.policy.gate
+        if hasattr(gate, "update_targets"):
+            gate.update_targets(plan.x, plan.qp)
+        self.policy.plan = plan
+        self.set_mixed_target(self.controller.mixed_target())
+
     # ------------------------------------------------------------ main loop
     def run(self, requests: Sequence[Request], horizon: float,
             failure_events: Sequence[tuple] = (),
             drain: bool = False) -> EngineMetrics:
         """Replay `requests` until `horizon`.
 
-        ``failure_events``: iterable of (t, "fail"|"recover"|"straggle", sid[, speed]).
+        ``failure_events``: iterable of
+        (t, "fail"|"recover"|"straggle"|"degrade", sid[, speed/scale]).
         ``drain=False`` follows the paper's Section 6.2 convention (stop at the
         last prompt arrival); ``drain=True`` runs to `horizon`.
         """
@@ -576,11 +640,7 @@ class ClusterEngine:
             elif kind == "control":
                 plan = self.controller.maybe_replan(t)
                 if plan is not None:
-                    gate = self.policy.gate
-                    if hasattr(gate, "update_targets"):
-                        gate.update_targets(plan.x, plan.qp)
-                    self.policy.plan = plan
-                    self.set_mixed_target(self.controller.mixed_target())
+                    self._publish_plan(plan)
                 self._push(t + self.controller.cfg.replan_every, "control", None)
             elif kind == "fail":
                 self.fail_server(payload[0])
@@ -588,6 +648,8 @@ class ClusterEngine:
                 self.recover_server(payload[0])
             elif kind == "straggle":
                 self.set_straggler(payload[0], payload[1])
+            elif kind == "degrade":
+                self.set_link(payload[0], payload[1])
             if self._probes is not None:
                 if self.metrics.abandons > prev_ab:
                     self._probes.count(

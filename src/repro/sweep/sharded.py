@@ -36,7 +36,6 @@ See ``docs/SHARDING.md`` for the mesh layout and the tiling math.
 
 from __future__ import annotations
 
-import warnings
 from dataclasses import dataclass
 from typing import Optional
 
@@ -55,9 +54,6 @@ __all__ = [
 # single-device oracle, "shard_map" must match it bitwise
 PLACEMENTS = ("single", "vmap", "shard_map")
 
-_serialized_warned = False
-
-
 def detected_devices() -> int:
     import jax
 
@@ -65,17 +61,19 @@ def detected_devices() -> int:
 
 
 def _warn_serialized(n_devices: int) -> None:
-    """One-time: a shard_map placement that landed on one device is a
-    correct but serial run (visible next to the compat-shim warning)."""
-    global _serialized_warned
-    if not _serialized_warned:
-        _serialized_warned = True
-        warnings.warn(
-            f"placement='shard_map' is running on a 1-device mesh "
-            f"({n_devices} device detected): results are exact but the "
-            f"batch is not partitioned -- force more host devices with "
-            f"XLA_FLAGS=--xla_force_host_platform_device_count=N",
-            RuntimeWarning, stacklevel=3)
+    """Once per process: a shard_map placement that landed on one device
+    is a correct but serial run.  Shares the ``"shard-serial"`` guard
+    with the compat shard_map shim, so the condition warns exactly once
+    no matter which layer detects it first."""
+    from repro.compat import warn_once
+
+    warn_once(
+        "shard-serial",
+        f"placement='shard_map' is running on a 1-device mesh "
+        f"({n_devices} device detected): results are exact but the "
+        f"batch is not partitioned -- force more host devices with "
+        f"XLA_FLAGS=--xla_force_host_platform_device_count=N",
+        stacklevel=4)
 
 
 @dataclass(frozen=True)

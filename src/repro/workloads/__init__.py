@@ -21,8 +21,8 @@ from .arrivals import (ArrivalProcess, MMPPArrivals,
                        flash_crowd, rate_shift)
 from .closed_loop import (VARIANTS, ClosedLoopConfig, compare_policies,
                           plans_for_scenarios, run_closed_loop)
-from .scenarios import (CapacityEvent, Scenario, ScenarioError, get_scenario,
-                        list_scenarios, register_scenario)
+from .scenarios import (CapacityEvent, EVENT_KINDS, Scenario, ScenarioError,
+                        get_scenario, list_scenarios, register_scenario)
 
 __all__ = [
     "ArrivalProcess",
@@ -33,6 +33,7 @@ __all__ = [
     "flash_crowd",
     "diurnal",
     "CapacityEvent",
+    "EVENT_KINDS",
     "Scenario",
     "ScenarioError",
     "register_scenario",

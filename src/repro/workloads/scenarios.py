@@ -38,6 +38,7 @@ from .arrivals import (ArrivalProcess, MMPPArrivals, PoissonArrivals, diurnal,
 
 __all__ = [
     "CapacityEvent",
+    "EVENT_KINDS",
     "Scenario",
     "ScenarioError",
     "register_scenario",
@@ -50,25 +51,33 @@ class ScenarioError(KeyError):
     """Unknown scenario name or invalid scenario definition."""
 
 
+#: Capacity-event verbs the engine understands; docs/HETEROGENEITY.md
+#: must document every kind and ``tools/check_docs.py`` enforces both
+#: directions.
+EVENT_KINDS = ("fail", "recover", "straggle", "degrade")
+
+
 @dataclass(frozen=True)
 class CapacityEvent:
     """One scripted elasticity event.
 
     ``kind`` is one of the engine's event verbs: ``"fail"`` /
     ``"recover"`` (elastic capacity, replanned via
-    ``OnlineController.set_capacity``) or ``"straggle"`` (iteration-time
-    multiplier ``speed``).  ``sid`` is the target server id; scripts are
-    authored against the scenario's recommended cluster size and the
-    harness clamps ids to the actual ``n``.
+    ``OnlineController.set_capacity``), ``"straggle"`` (iteration-time
+    multiplier ``speed``) or ``"degrade"`` (KV handoff link bandwidth
+    fraction ``speed``; 1.0 restores -- replans WITHOUT a capacity
+    change).  ``sid`` is the target server id; scripts are authored
+    against the scenario's recommended cluster size and the harness
+    clamps ids to the actual ``n``.
     """
 
     t: float
-    kind: str  # "fail" | "recover" | "straggle"
+    kind: str  # one of EVENT_KINDS
     sid: int
     speed: float = 1.0
 
     def __post_init__(self) -> None:
-        if self.kind not in ("fail", "recover", "straggle"):
+        if self.kind not in EVENT_KINDS:
             raise ValueError(f"unknown capacity event kind {self.kind!r}")
         if self.t < 0 or self.sid < 0 or self.speed <= 0:
             raise ValueError("capacity events need t, sid >= 0 and speed > 0")
@@ -76,7 +85,7 @@ class CapacityEvent:
     def as_tuple(self, n: Optional[int] = None) -> tuple:
         """Engine-format event; clamps ``sid`` into ``[0, n)`` if given."""
         sid = self.sid if n is None else min(self.sid, n - 1)
-        if self.kind == "straggle":
+        if self.kind in ("straggle", "degrade"):
             return (self.t, self.kind, sid, self.speed)
         return (self.t, self.kind, sid)
 
@@ -422,6 +431,27 @@ _BUILTINS = (
         ),
         seed=17,
         tags=("nonstationary", "elastic", "failures"),
+    ),
+    Scenario(
+        name="link_degrade",
+        description="Interconnect brownout under steady load: three "
+                    "servers lose 3/4 of their KV handoff bandwidth on "
+                    "[60, 180) s (`degrade` events), then recover -- "
+                    "slows prefill->decode transfers without changing "
+                    "the server count, so replans are rate-driven.",
+        profiles=_AZURE_2023_PROFILES,
+        arrivals=PoissonArrivals(rate=16.0),
+        horizon=300.0,
+        capacity_events=(
+            CapacityEvent(60.0, "degrade", 0, speed=0.25),
+            CapacityEvent(60.0, "degrade", 1, speed=0.25),
+            CapacityEvent(60.0, "degrade", 2, speed=0.25),
+            CapacityEvent(180.0, "degrade", 0, speed=1.0),
+            CapacityEvent(180.0, "degrade", 1, speed=1.0),
+            CapacityEvent(180.0, "degrade", 2, speed=1.0),
+        ),
+        seed=19,
+        tags=("nonstationary", "elastic", "links", "heterogeneity"),
     ),
 )
 

@@ -121,6 +121,45 @@ def test_capacity_churn_scenario_drives_elastic_replans():
     assert m["completions"] > 0
 
 
+def test_set_link_replans_without_capacity_change():
+    """A ``degrade`` event shifts transfer-adjusted service rates but not
+    the server count, so ``set_capacity`` would no-op -- the engine must
+    replan directly, and restoring the link must replan again."""
+    from repro.core.planning import solve_bundled_lp
+    from repro.core.policies import gate_and_route
+    from repro.serving.engine_sim import ClusterEngine, EngineConfig
+
+    classes = [WorkloadClass("a", 2048, 36, 0.5, 3e-4),
+               WorkloadClass("b", 1020, 211, 0.5, 3e-4)]
+    plan = solve_bundled_lp(classes, PRIM, PRICING)
+    ctrl = _controller(classes)
+    eng = ClusterEngine(classes, gate_and_route(plan),
+                        EngineConfig(PRIM, PRICING, N, seed=0),
+                        controller=ctrl)
+    before = ctrl.replan_count
+    eng.set_link(2, 0.25)  # brownout: 1/4 of nominal bandwidth left
+    assert ctrl.replan_count == before + 1
+    assert eng.servers[2].link_scale == 0.25
+    assert ctrl.n == N  # capacity unchanged -- this was NOT set_capacity
+    eng.set_link(2, 1.0)  # recovery replans too
+    assert ctrl.replan_count == before + 2
+    assert eng.servers[2].link_scale == 1.0
+    with pytest.raises(ValueError, match="link scale"):
+        eng.set_link(2, 0.0)
+
+
+def test_link_degrade_scenario_replans_and_recovers():
+    """link_degrade end-to-end: the closed loop replays the degrade +
+    restore script (6 extra replans on top of the control epochs) and
+    keeps completing work through the brownout window."""
+    cfg = ClosedLoopConfig(n_servers=N, seed=0, rate_scale=0.4,
+                           horizon=200.0)
+    m = run_closed_loop("link_degrade", "adaptive", cfg)
+    # epoch replans + the three degrade and three restore replans
+    assert m["replans"] > 200.0 / 10.0
+    assert m["completions"] > 0
+
+
 def test_unknown_variant_rejected():
     with pytest.raises(ValueError, match="variant"):
         run_closed_loop("rate_shift", "zeppelin", QUICK)

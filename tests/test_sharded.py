@@ -227,7 +227,7 @@ def _toy_kernel_case(n_cells):
 @pytest.mark.sim
 def test_run_sharded_matches_vmap_one_device():
     import jax
-    import repro.sweep.sharded as sharded
+    from repro import compat
 
     kernel, rep, batched = _toy_kernel_case(5)
     # the oracle is the JITTED vmap -- what the engines actually run
@@ -235,16 +235,22 @@ def test_run_sharded_matches_vmap_one_device():
     # always jit-vs-jit)
     oracle = jax.jit(jax.vmap(lambda k, x: kernel(rep, (k, x))))(*batched)
 
-    sharded._serialized_warned = False
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
+    compat.reset_warn_once("shard-serial")
+    with pytest.warns(RuntimeWarning, match="1-device mesh"):
         raw, report = run_sharded(kernel, rep, batched, n_devices=1)
-    # the silent-fallback fix: serialization is loud, exactly once
-    assert any("1-device mesh" in str(x.message) for x in w)
     assert report["serialized"] and report["n_devices"] == 1
     for k in ("y", "s"):
         np.testing.assert_array_equal(np.asarray(raw[k]),
                                       np.asarray(oracle[k]))
+
+    # the per-process dedupe: the "shard-serial" kind is spent, so a
+    # second serialized run (and the compat shim, which shares the kind)
+    # stays quiet instead of warning once per layer per call
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        run_sharded(kernel, rep, batched, n_devices=1)
+    assert not [x for x in w if issubclass(x.category, RuntimeWarning)
+                and "1-device mesh" in str(x.message)]
 
 
 @pytest.mark.sim

@@ -64,6 +64,12 @@ ARTIFACTS = {
                                    "stream", "mode",
                                    "budget_exhausted"]),
     "frontier": dict(bench="bench_frontier", required=[]),
+    "heterogeneity": dict(bench="bench_heterogeneity", committed=True,
+                          required=["rows", "control",
+                                    "aware_beats_blind",
+                                    "degenerate_exact",
+                                    "noise_floor_pct", "mode",
+                                    "budget_exhausted"]),
     "matched": dict(bench="bench_matched", required=[]),
     "matched_jax": dict(bench="bench_matched", required=[]),
     "optimality_gap": dict(bench="bench_optimality_gap", committed=True,
@@ -212,6 +218,56 @@ def check_optimality_gap(payload: dict) -> list:
     return errors
 
 
+def check_heterogeneity(payload: dict) -> list:
+    """Numeric gates for the mixed-fleet class-aware routing study.
+
+    The committed artifact is produced in ``--full`` mode and promises
+    the headline ordering: on every transfer-cost instance
+    (``xfer_scale > 0`` -- the free-handoff boundary row legitimately
+    favours the pooled class-blind gate) the class-blind gap is at
+    least the class-aware gap (minus the structural noise floor), with
+    a paired lower confidence bound clear of zero somewhere, and the
+    one-class zero-transfer control degenerates to the homogeneous
+    planner exactly (R* bitwise) and to the committed optimality_gap
+    row within the noise floor.  CI's ``bench-smoke`` regenerates the
+    file in quick mode (tiny fleet, few seeds), where only the
+    structural keys are checked.
+    """
+    errors = []
+    if payload.get("quick"):
+        return errors
+    if not payload.get("aware_beats_blind"):
+        errors.append(
+            "aware_beats_blind is false: no mixed instance shows a "
+            "paired class-aware advantage with its CI clear of zero")
+    if not payload.get("degenerate_exact"):
+        errors.append(
+            "degenerate_exact is false: the one-class zero-transfer "
+            "hetero LP no longer matches the homogeneous planner bitwise")
+    control = payload.get("control") or {}
+    if control.get("matches_committed") is False:
+        errors.append(
+            f"control gap {control.get('gap_pct')!r}% is outside the "
+            f"noise floor of the committed optimality_gap row "
+            f"({control.get('committed_gap_pct')!r}%)")
+    floor = payload.get("noise_floor_pct", 1.0)
+    for row in payload.get("rows") or []:
+        ga, gb = row.get("gap_aware_pct"), row.get("gap_blind_pct")
+        if not (isinstance(ga, (int, float))
+                and isinstance(gb, (int, float))):
+            errors.append(f"row {row.get('instance')!r}: missing "
+                          f"gap_aware_pct/gap_blind_pct")
+        elif row.get("xfer_scale", 0.0) == 0.0:
+            continue  # boundary row: pooling may beat static splits
+        elif gb < ga - floor:
+            errors.append(
+                f"row {row.get('instance')}/xfer="
+                f"{row.get('xfer_scale')}: class-blind gap {gb}% beats "
+                f"class-aware {ga}% past the noise floor -- the class-"
+                f"aware routing or the per-class LP regressed")
+    return errors
+
+
 def check(root: Path) -> list:
     errors = []
     benches = registry_benches(root)
@@ -257,6 +313,9 @@ def check(root: Path) -> list:
         if stem == "optimality_gap":
             errors.extend(f"{rel}: {e}"
                           for e in check_optimality_gap(payload))
+        if stem == "heterogeneity":
+            errors.extend(f"{rel}: {e}"
+                          for e in check_heterogeneity(payload))
         for where, val in iter_budget_keys(payload):
             if val != 0:
                 errors.append(

@@ -28,7 +28,8 @@ from pathlib import Path
 DOCS = ("README.md", "docs/ARCHITECTURE.md", "docs/SIMULATORS.md",
         "docs/WORKLOADS.md", "docs/PLANNING.md", "docs/CALIBRATION.md",
         "docs/SHARDING.md", "docs/OBSERVABILITY.md",
-        "benchmarks/README.md", "ROADMAP.md", "CHANGES.md")
+        "docs/HETEROGENEITY.md", "benchmarks/README.md", "ROADMAP.md",
+        "CHANGES.md")
 
 LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
 
@@ -276,6 +277,97 @@ def check_probe_catalog(root: Path, registry, derived) -> list:
     return errors
 
 
+# how docs name GPU server classes (registry lookups, FleetSpec specs,
+# backticked prose) -- same idea as the evaluator/scenario patterns
+SERVER_CLASS_RES = (
+    re.compile(r"`([a-z0-9-]+)` server class"),
+    re.compile(r"server class(?:es)? `([a-z0-9-]+)`"),
+    re.compile(r"get_server_class\(\"([a-z0-9-]+)\"\)"),
+    re.compile(r"FleetSpec\.of\(\[\(\"([a-z0-9-]+)\""),
+)
+
+
+def known_server_classes(root: Path):
+    """The GPU server-class registry, or an error string."""
+    sys.path.insert(0, str(root / "src"))
+    try:
+        from repro.core.hetero import list_server_classes
+        return set(list_server_classes()), None
+    except Exception as exc:  # missing dep / broken import = check error
+        return None, f"cannot import repro.core.hetero ({exc})"
+
+
+def mentioned_server_classes(md: str):
+    names = set()
+    for rx in SERVER_CLASS_RES:
+        for m in rx.finditer(md):
+            names.update(p for p in m.group(1).split(",") if p)
+    return names
+
+
+def check_server_class_catalog(root: Path, registry) -> list:
+    """Reverse direction of the server-class check: every registered
+    class must be documented in docs/HETEROGENEITY.md's catalog."""
+    if registry is None:
+        return []
+    doc = root / "docs" / "HETEROGENEITY.md"
+    if not doc.exists():
+        return ["docs/HETEROGENEITY.md: missing (the server-class "
+                "catalog must be documented there)"]
+    ticked = set(re.findall(r"`([a-z0-9-]+)`", doc.read_text()))
+    return [
+        f"docs/HETEROGENEITY.md: registered server class {name!r} is "
+        f"not documented in the catalog"
+        for name in sorted(registry - ticked)
+    ]
+
+
+# how docs name capacity-event kinds (CapacityEvent snippets, engine
+# event tuples, backticked prose)
+EVENT_KIND_RES = (
+    re.compile(r"`([a-z_]+)` capacity[ -]events?\b"),
+    re.compile(r"capacity[ -]events? `([a-z_]+)`"),
+    re.compile(r"`([a-z_]+)` event kind"),
+    re.compile(r"event kinds? `([a-z_]+)`"),
+    re.compile(r"CapacityEvent\([^,)]+,\s*\"([a-z_]+)\""),
+)
+
+
+def known_event_kinds(root: Path):
+    """The capacity-event-kind registry, or an error string."""
+    sys.path.insert(0, str(root / "src"))
+    try:
+        from repro.workloads import EVENT_KINDS
+        return set(EVENT_KINDS), None
+    except Exception as exc:  # missing dep / broken import = check error
+        return None, f"cannot import repro.workloads ({exc})"
+
+
+def mentioned_event_kinds(md: str):
+    names = set()
+    for rx in EVENT_KIND_RES:
+        for m in rx.finditer(md):
+            names.update(p for p in m.group(1).split(",") if p)
+    return names
+
+
+def check_event_kind_catalog(root: Path, registry) -> list:
+    """Reverse direction of the event-kind check: every registered
+    capacity-event kind must be documented in docs/WORKLOADS.md (where
+    the capacity-event scripts live)."""
+    if registry is None:
+        return []
+    doc = root / "docs" / "WORKLOADS.md"
+    if not doc.exists():
+        return []
+    ticked = set(re.findall(r"`([a-z_]+)`", doc.read_text()))
+    return [
+        f"docs/WORKLOADS.md: registered capacity-event kind {name!r} is "
+        f"not documented in the catalog"
+        for name in sorted(registry - ticked)
+    ]
+
+
 # how docs name serving-engine modules (module paths only -- a bare
 # ``engine_speed`` is a benchmark artifact stem, not an engine)
 ENGINE_MODULE_RES = (
@@ -419,6 +511,12 @@ def check(root: Path) -> list:
     models, mdl_err = known_models(root)
     if mdl_err:
         errors.append(f"iteration-time-model registry: {mdl_err}")
+    server_classes, svc_err = known_server_classes(root)
+    if svc_err:
+        errors.append(f"server-class registry: {svc_err}")
+    event_kinds, evk_err = known_event_kinds(root)
+    if evk_err:
+        errors.append(f"capacity-event-kind registry: {evk_err}")
     for rel in DOCS:
         doc = root / rel
         if not doc.exists():
@@ -457,11 +555,24 @@ def check(root: Path) -> list:
                 errors.append(
                     f"{rel}: iteration-time model {name!r} not in the "
                     f"repro.calibration registry {sorted(models)}")
+        if server_classes is not None:
+            for name in sorted(mentioned_server_classes(md)
+                               - server_classes):
+                errors.append(
+                    f"{rel}: server class {name!r} not in the "
+                    f"repro.core.hetero registry {sorted(server_classes)}")
+        if event_kinds is not None:
+            for name in sorted(mentioned_event_kinds(md) - event_kinds):
+                errors.append(
+                    f"{rel}: capacity-event kind {name!r} not in "
+                    f"repro.workloads.EVENT_KINDS {sorted(event_kinds)}")
     probes, derived, prb_err = known_probes(root)
     if prb_err:
         errors.append(f"probe registry: {prb_err}")
     errors.extend(check_placement_catalog(root, placements))
     errors.extend(check_scenario_catalog(root, scenarios))
+    errors.extend(check_server_class_catalog(root, server_classes))
+    errors.extend(check_event_kind_catalog(root, event_kinds))
     errors.extend(check_model_catalog(root, models))
     errors.extend(check_evaluator_catalog(root, registry))
     errors.extend(check_probe_catalog(root, probes, derived))
